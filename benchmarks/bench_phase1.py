@@ -1,0 +1,47 @@
+"""E3 — paper Fig. 7: expected O(|B|+|I|+|L|) vs observed Phase-1 time.
+
+Scatter of (analytic cost, wall seconds) per (partition, level); reports
+the linear-fit slope and R² — the paper's claim is that observed times
+track the complexity model linearly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import partition_graph
+from repro.core.host_engine import HostEngine
+from repro.graphgen.eulerize import eulerian_rmat
+from repro.graphgen.partition import partition_vertices
+
+
+def run(scale=14, parts=8, seed=0):
+    g = eulerian_rmat(scale, avg_degree=5, seed=seed)
+    pg = partition_graph(g, partition_vertices(g, parts, seed=seed))
+    res = HostEngine(pg).run(validate=True)
+    xs, ys = [], []
+    for ls in res.levels:
+        for pid, cost in ls.phase1_cost.items():
+            if cost > 0:
+                xs.append(cost)
+                ys.append(ls.phase1_seconds[pid])
+    xs, ys = np.array(xs, float), np.array(ys, float)
+    slope, intercept = np.polyfit(xs, ys, 1)
+    pred = slope * xs + intercept
+    ss_res = np.sum((ys - pred) ** 2)
+    ss_tot = np.sum((ys - ys.mean()) ** 2) + 1e-12
+    r2 = 1 - ss_res / ss_tot
+    return {"points": len(xs), "slope_s_per_unit": slope,
+            "r2": round(float(r2), 3),
+            "xs": xs.tolist(), "ys": ys.tolist()}
+
+
+def main():
+    out = run()
+    print(f"Phase-1 complexity fit: {out['points']} points, "
+          f"slope={out['slope_s_per_unit']:.3e} s/unit, R²={out['r2']}")
+    assert out["r2"] > 0.5, "observed time should track O(|B|+|I|+|L|)"
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""E1/E6 — paper Fig. 5 + superstep comparison.
+
+Weak-ish scaling series (graph size ∝ partitions, scaled down from the
+paper's G20/P2…G50/P8 to CPU-feasible sizes), reporting total engine time,
+user (Phase-1) compute time, supersteps, and the Makki-baseline
+coordination costs the paper argues against (§2.2).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.graph import partition_graph
+from repro.core.host_engine import HostEngine
+from repro.core.makki import makki_tour
+from repro.graphgen.eulerize import eulerian_rmat
+from repro.graphgen.partition import partition_vertices
+
+SERIES = [  # (scale, parts) — mirrors G20/P2, G30/P3, G40/P4, G40/P8
+    (12, 2), (13, 3), (14, 4), (14, 8),
+]
+
+
+def run(series=SERIES, seed=0):
+    rows = []
+    for scale, parts in series:
+        g = eulerian_rmat(scale, avg_degree=5, seed=seed + scale)
+        part = partition_vertices(g, parts, seed=seed)
+        pg = partition_graph(g, part)
+        t0 = time.perf_counter()
+        eng = HostEngine(pg)
+        res = eng.run(validate=True)
+        total = time.perf_counter() - t0
+        user = sum(sum(ls.phase1_seconds.values()) for ls in res.levels)
+        mk = makki_tour(pg)
+        rows.append({
+            "graph": f"V{g.num_vertices//1000}k/P{parts}",
+            "V": g.num_vertices, "E": g.num_edges,
+            "cut%": round(100 * pg.cut_fraction(), 1),
+            "imbal%": round(100 * pg.vertex_imbalance(), 1),
+            "total_s": round(total, 2),
+            "user_s": round(user, 2),
+            "supersteps": res.supersteps,
+            "makki_vertex_supersteps": mk.supersteps_vertex_centric,
+            "makki_partition_supersteps": mk.supersteps_partition_centric,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0].keys())
+    print(" | ".join(f"{c:>12s}" for c in cols))
+    for r in rows:
+        print(" | ".join(f"{str(r[c]):>12s}" for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

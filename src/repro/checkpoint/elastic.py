@@ -1,0 +1,33 @@
+"""Elastic restore: bring a checkpoint up on a different mesh.
+
+Checkpoints store *logical* arrays (checkpoint.ckpt gathers shards on
+save), so elasticity is a placement decision at restore time: build the
+new mesh, recompute the sharding rules for it, and ``device_put`` — no
+resharding pass, no format migration.  Works across device-count changes
+(e.g. 8 hosts → 4 after a failure) and across mesh-shape changes
+(16×16 → 8×16), which is how a 1000+-node deployment degrades gracefully.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from .ckpt import CheckpointManager
+
+
+def elastic_restore(
+    ckpt: CheckpointManager,
+    tree_like: Any,
+    new_mesh: Mesh,
+    sharding_rule: Callable[[Any, Mesh], Any],
+    step: Optional[int] = None,
+):
+    """Restore ``tree_like``-shaped state onto ``new_mesh``.
+
+    ``sharding_rule(params, mesh) -> NamedSharding tree`` is the same rule
+    used at launch (parallel.sharding), evaluated against the new mesh.
+    """
+    shardings = sharding_rule(tree_like, new_mesh)
+    return ckpt.restore(tree_like, step=step, shardings=shardings)

@@ -1,0 +1,68 @@
+"""The paper's own architecture: partition-centric Euler circuits on a
+G50-class Eulerian RMAT graph, 512 partitions = 512 devices.
+
+Production sizing mirrors the paper's largest graph (G50/P8: 49M vertices,
+264M undirected edges) at pod scale: 512 partitions × 256k edges ≈ 134M
+local edges + cut edges.  The dry-run lowers one BSP superstep (the
+level-parametric shard_map program) on the production mesh.
+"""
+import dataclasses
+from ..core.engine import EngineCaps
+from .base import ArchConfig, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class EulerConfig:
+    name: str
+    caps: EngineCaps
+    n_levels: int
+
+
+def _model(reduced=False):
+    if reduced:
+        return EulerConfig(
+            "euler-smoke",
+            EngineCaps(edge_cap=64, park_cap=64, ship_cap=32, new_cap=96,
+                       open_cap=48, touch_cap=96),
+            n_levels=4,
+        )
+    return EulerConfig(
+        "euler-rmat-512",
+        EngineCaps(
+            edge_cap=262_144,      # 256k local edges / partition
+            park_cap=262_144,      # parked cut edges (§5 dedup+defer)
+            ship_cap=4_096,        # per (src,dst) lane per level
+            new_cap=524_288,       # level-0 pool = local edges
+            open_cap=32_768,
+            touch_cap=65_536,
+            # §Perf (euler H-E3): live comps per partition are far below
+            # the padded capacity, so log2(cap)+2 hook rounds over-
+            # provision ~2x; runtime convergence flags guard the cut.
+            hook_rounds=12,
+            splice_rounds=6,
+            # §Perf (euler H-E4): ship lanes are per (src,dst) PAIR; a
+            # device ships its opens/touch to exactly ONE ancestor per
+            # level, so lane = full table cap inflates the all_to_all
+            # route buffers 256x (s32[16777217] scatter buffers dominated
+            # the memory term).  Size lanes to real transfer volumes;
+            # runtime overflow flags guard them.
+            open_ship_cap=2_048,
+            touch_ship_cap=4_096,
+        ),
+        n_levels=10,               # ceil(log2 512) + 1
+    )
+
+
+SHAPES = {
+    "superstep": ShapeCell("superstep", "superstep",
+                           note="one BSP level: ship + Phase 1"),
+}
+
+
+def _reduced():
+    return ArchConfig("euler-rmat", "euler", _model(True), SHAPES,
+                      source="this paper")
+
+
+CONFIG = ArchConfig("euler-rmat", "euler", _model(), SHAPES,
+                    source="this paper", reduced=_reduced)

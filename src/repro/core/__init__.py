@@ -1,0 +1,12 @@
+"""Core: the paper's partition-centric Euler circuit algorithm."""
+from .graph import Graph, MetaGraph, Partition, PartitionedGraph, partition_graph
+from .hierholzer import hierholzer_circuit, validate_circuit
+from .host_engine import HostEngine
+from .phase2 import MergeTree, generate_merge_tree
+from .makki import makki_tour
+
+__all__ = [
+    "Graph", "MetaGraph", "Partition", "PartitionedGraph", "partition_graph",
+    "hierholzer_circuit", "validate_circuit", "HostEngine", "MergeTree",
+    "generate_merge_tree", "makki_tour",
+]

@@ -1,0 +1,580 @@
+"""Distributed BSP engine: partitions ↔ devices, supersteps ↔ jitted
+collective programs.
+
+The paper's Phase-2 execution maps 1:1 onto a TPU pod:
+
+  · each mesh device hosts one partition (512 partitions on the 2×16×16
+    production mesh, flattened over ("pod","data","model"));
+  · one *superstep* = one jitted shard_map program: ship pathMap entries
+    (activated remote edges, open path endpoints, boundary touch pairs) via
+    a single fused ``all_to_all``, then run the vectorized Phase 1 locally;
+  · the merge tree is host-side static data (paper builds it offline too),
+    baked into an ``anc_table[level, part0] → active partition`` array so
+    *one* compiled program serves every level;
+  · §5's heuristics are structural here, not just accounting:
+    ``deferred_transfer`` keeps parked remote edges on their leaf device
+    until their activation level (bounding the static table capacities),
+    and ``remote_dedup`` parks each cut edge on exactly one side.  Both
+    default ON in the distributed engine; the host engine measures the
+    paper's baseline without them.
+
+Mate logs (the pairing decisions) are emitted per level — the "persist to
+disk" of the paper — and Phase 3 replays them into the final circuit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .graph import PartitionedGraph
+from .phase1 import (
+    BIG,
+    I32,
+    NewEdges,
+    OpenTable,
+    Phase1Caps,
+    Phase1Out,
+    TouchTable,
+    phase1_local,
+)
+from .phase2 import MergeTree, ancestor_at_level, generate_merge_tree, merge_level_of
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCaps:
+    """Static capacities of the per-device tables (see loader sizing)."""
+
+    edge_cap: int        # level-0 local edges per partition
+    park_cap: int        # parked remote edges per device
+    ship_cap: int        # per (src,dst) all_to_all lane width, edges
+    new_cap: int         # activated edges entering one Phase 1
+    open_cap: int
+    touch_cap: int
+    open_ship_cap: int = 0    # per (src,dst) lane for opens (0 → open_cap)
+    touch_ship_cap: int = 0   # per (src,dst) lane for touch (0 → touch_cap)
+    hook_rounds: int = 0
+    splice_rounds: int = 12
+    static_splice: bool = False
+
+    def phase1(self) -> Phase1Caps:
+        return Phase1Caps(
+            open_cap=self.open_cap,
+            touch_cap=self.touch_cap,
+            hook_rounds=self.hook_rounds,
+            splice_rounds=self.splice_rounds,
+            static_splice=self.static_splice,
+        )
+
+
+class EngineState(NamedTuple):
+    """Sharded BSP state; leading axis = partition (= device)."""
+
+    # parked remote edges (on the leaf device that owns them)
+    pk_eid: jnp.ndarray   # [n, PK]
+    pk_u: jnp.ndarray
+    pk_v: jnp.ndarray
+    pk_lau: jnp.ndarray
+    pk_lav: jnp.ndarray
+    pk_act: jnp.ndarray   # activation level
+    pk_own0: jnp.ndarray  # level-0 partition of endpoint u (dest key)
+    pk_mask: jnp.ndarray
+    # open path endpoints
+    op_stub: jnp.ndarray  # [n, OC]
+    op_vert: jnp.ndarray
+    op_la: jnp.ndarray
+    op_comp: jnp.ndarray
+    op_own0: jnp.ndarray
+    op_mask: jnp.ndarray
+    # boundary touch pairs
+    tc_s1: jnp.ndarray    # [n, TC]
+    tc_s2: jnp.ndarray
+    tc_vert: jnp.ndarray
+    tc_la: jnp.ndarray
+    tc_comp: jnp.ndarray
+    tc_own0: jnp.ndarray
+    tc_mask: jnp.ndarray
+    # level-0 local edges (consumed at superstep 0)
+    le_eid: jnp.ndarray   # [n, EC]
+    le_u: jnp.ndarray
+    le_v: jnp.ndarray
+    le_lau: jnp.ndarray
+    le_lav: jnp.ndarray
+    le_mask: jnp.ndarray
+
+
+class StepOut(NamedTuple):
+    state: EngineState
+    log_s1: jnp.ndarray    # [n, PC] mate log for this level
+    log_s2: jnp.ndarray
+    log_mask: jnp.ndarray
+    flags: jnp.ndarray     # [n, 4] cc, splice, p1-overflow, ship-overflow
+    metrics: jnp.ndarray   # [n, 4] longs: remote, opens, touch, comps
+
+
+def _route(dest: jnp.ndarray, mask: jnp.ndarray, fields, n: int, lane: int):
+    """Scatter entries into an [n, lane] send buffer keyed by dest device.
+    Returns (buffers..., buf_mask, overflow)."""
+    key = jnp.where(mask, dest, n)  # pads route to virtual slot n
+    order = jnp.argsort(key, stable=True)
+    kd = key[order]
+    idx = jnp.arange(kd.shape[0], dtype=I32)
+    newseg = jnp.concatenate([jnp.ones((1,), bool), kd[1:] != kd[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(newseg, idx, 0)
+    )
+    lane_pos = idx - seg_start
+    ok = (kd < n) & (lane_pos < lane)
+    overflow = jnp.any((kd < n) & (lane_pos >= lane))
+    flat = jnp.where(ok, kd * lane + lane_pos, n * lane)
+    outs = []
+    for f in fields:
+        buf = jnp.full((n * lane + 1,), BIG, dtype=f.dtype)
+        buf = buf.at[flat].set(jnp.where(ok, f[order], BIG))
+        outs.append(buf[:-1].reshape(n, lane))
+    bm = jnp.zeros((n * lane + 1,), bool).at[flat].set(ok)
+    return outs, bm[:-1].reshape(n, lane), overflow
+
+
+def _compact_rows(fields, mask, cap: int):
+    """Compact a flat masked table to ``cap`` rows (valid-first)."""
+    order = jnp.argsort(~mask, stable=True)
+    overflow = jnp.sum(mask) > cap
+    outs = [f[order][:cap] for f in fields]
+    return outs, mask[order][:cap], overflow
+
+
+class DistributedEngine:
+    """Drives supersteps over a device mesh; also exposes the compiled
+    superstep for the dry-run/roofline harness."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        axis_names: Tuple[str, ...],
+        caps: EngineCaps,
+        n_levels: int,
+        remote_dedup: bool = True,
+        deferred_transfer: bool = True,
+    ):
+        self.mesh = mesh
+        self.axes = axis_names
+        self.caps = caps
+        self.n_levels = n_levels  # number of supersteps = tree height + 1
+        self.n = int(np.prod([mesh.shape[a] for a in axis_names]))
+        self.remote_dedup = remote_dedup
+        self.deferred_transfer = deferred_transfer
+        self._step = None
+
+    # ------------------------------------------------------------------
+    # loading
+    # ------------------------------------------------------------------
+    @staticmethod
+    def plan(pg: PartitionedGraph) -> Tuple[MergeTree, np.ndarray, np.ndarray, np.ndarray]:
+        """Merge tree + per-edge activation schedule + per-vertex last
+        activation level.  Host-side, O(E) + O(n² log n)."""
+        tree = generate_merge_tree(pg.meta)
+        E = pg.graph.num_edges
+        act = np.full(E, -1, dtype=np.int64)
+        is_cut = pg.edge_part_u != pg.edge_part_v
+        cache = {}
+        cu = pg.edge_part_u[is_cut]
+        cv = pg.edge_part_v[is_cut]
+        acts = np.empty(len(cu), dtype=np.int64)
+        for k, (a, b) in enumerate(zip(cu, cv)):
+            key = (min(a, b), max(a, b))
+            if key not in cache:
+                cache[key] = merge_level_of(tree, int(a), int(b))
+            acts[k] = cache[key]
+        act[is_cut] = acts
+        # last activation level per vertex (for touch-retention)
+        V = pg.graph.num_vertices
+        la = np.zeros(V, dtype=np.int64)
+        cut_ids = np.nonzero(is_cut)[0]
+        np.maximum.at(la, pg.graph.edge_u[cut_ids], act[cut_ids] + 1)
+        np.maximum.at(la, pg.graph.edge_v[cut_ids], act[cut_ids] + 1)
+        return tree, act, la, cut_ids
+
+    @classmethod
+    def size_caps(cls, pg: PartitionedGraph, slack: float = 1.3,
+                  open_cap: Optional[int] = None,
+                  touch_cap: Optional[int] = None) -> "EngineCaps":
+        """Exact capacity sizing from the activation schedule."""
+        tree, act, la, cut_ids = cls.plan(pg)
+        n = pg.num_parts
+        edge_cap = max(len(p.local_eids) for p in pg.parts)
+        park = np.zeros(n, dtype=np.int64)
+        for e in cut_ids:
+            a, b = int(pg.edge_part_u[e]), int(pg.edge_part_v[e])
+            keeper = cls._keeper(pg, a, b)
+            park[keeper] += 1
+        new_per = {}
+        ship_per = {}
+        for e in cut_ids:
+            lvl = int(act[e])
+            a = int(pg.edge_part_u[e])
+            b = int(pg.edge_part_v[e])
+            keeper = cls._keeper(pg, a, b)
+            dest = ancestor_at_level(tree, a, lvl)
+            new_per[(dest, lvl)] = new_per.get((dest, lvl), 0) + 1
+            ship_per[(keeper, dest, lvl)] = ship_per.get((keeper, dest, lvl), 0) + 1
+        new_cap = max(new_per.values(), default=1)
+        ship_cap = max(ship_per.values(), default=1)
+        # opens bounded by odd-degree vertex counts; touch by boundary counts
+        deg = pg.graph.degrees()
+        ob = 0
+        bmax = 0
+        for lvl in range(tree.height + 1):
+            future = np.zeros(pg.graph.num_vertices, dtype=np.int64)
+            live = cut_ids[act[cut_ids] >= lvl]
+            np.add.at(future, pg.graph.edge_u[live], 1)
+            np.add.at(future, pg.graph.edge_v[live], 1)
+            odd = (deg - future) % 2 == 1
+            anc = np.array([ancestor_at_level(tree, p, lvl - 1) for p in range(n)])
+            owner = anc[pg.part_of_vertex]
+            for p in np.unique(owner):
+                sel = owner == p
+                ob = max(ob, int(odd[sel].sum()))
+                bmax = max(bmax, int((future[sel] > 0).sum()))
+        oc = open_cap or max(16, int(2 * ob * slack))
+        tc = touch_cap or max(16, int(bmax * 4 * slack))
+        return EngineCaps(
+            edge_cap=int(edge_cap * slack),
+            park_cap=max(8, int(park.max() * slack)),
+            ship_cap=max(8, int(ship_cap * slack)),
+            # the level-0 pool holds the initial local edges too
+            new_cap=max(8, int(new_cap * slack), int(edge_cap * slack)),
+            open_cap=oc,
+            touch_cap=tc,
+            open_ship_cap=oc,
+            touch_ship_cap=tc,
+        )
+
+    @staticmethod
+    def _keeper(pg: PartitionedGraph, a: int, b: int) -> int:
+        """§5a: the lighter partition keeps (parks) the cut edge."""
+        la_ = len(pg.parts[a].remote_eids)
+        lb_ = len(pg.parts[b].remote_eids)
+        return a if (la_, a) <= (lb_, b) else b
+
+    def load(self, pg: PartitionedGraph) -> Tuple[EngineState, np.ndarray]:
+        """Build the initial sharded state.  Returns (state, anc_table)."""
+        assert pg.num_parts == self.n, (pg.num_parts, self.n)
+        tree, act, la, cut_ids = self.plan(pg)
+        self.tree = tree
+        n, c = self.n, self.caps
+        g = pg.graph
+
+        def full(shape, fill=BIG):
+            return np.full(shape, fill, dtype=np.int32)
+
+        pk = {k: full((n, c.park_cap)) for k in
+              ("eid", "u", "v", "lau", "lav", "act", "own0")}
+        pk_mask = np.zeros((n, c.park_cap), dtype=bool)
+        le = {k: full((n, c.edge_cap)) for k in ("eid", "u", "v", "lau", "lav")}
+        le_mask = np.zeros((n, c.edge_cap), dtype=bool)
+
+        for p in pg.parts:
+            eids = p.local_eids
+            k = len(eids)
+            assert k <= c.edge_cap
+            le["eid"][p.pid, :k] = eids
+            le["u"][p.pid, :k] = g.edge_u[eids]
+            le["v"][p.pid, :k] = g.edge_v[eids]
+            le["lau"][p.pid, :k] = la[g.edge_u[eids]]
+            le["lav"][p.pid, :k] = la[g.edge_v[eids]]
+            le_mask[p.pid, :k] = True
+
+        fills = np.zeros(n, dtype=np.int64)
+        for e in cut_ids:
+            a, b = int(pg.edge_part_u[e]), int(pg.edge_part_v[e])
+            keeper = self._keeper(pg, a, b)
+            i = fills[keeper]
+            assert i < c.park_cap, "park_cap overflow at load"
+            pk["eid"][keeper, i] = e
+            pk["u"][keeper, i] = g.edge_u[e]
+            pk["v"][keeper, i] = g.edge_v[e]
+            pk["lau"][keeper, i] = la[g.edge_u[e]]
+            pk["lav"][keeper, i] = la[g.edge_v[e]]
+            pk["act"][keeper, i] = act[e]
+            pk["own0"][keeper, i] = a
+            pk_mask[keeper, i] = True
+            fills[keeper] += 1
+
+        anc_table = np.zeros((max(1, tree.height), n), dtype=np.int32)
+        for lvl in range(max(1, tree.height)):
+            for p in range(n):
+                anc_table[lvl, p] = ancestor_at_level(tree, p, lvl)
+
+        oc, tc = c.open_cap, c.touch_cap
+        z_o = np.full((n, oc), BIG, dtype=np.int32)
+        z_t = np.full((n, tc), BIG, dtype=np.int32)
+        state = EngineState(
+            pk_eid=pk["eid"], pk_u=pk["u"], pk_v=pk["v"], pk_lau=pk["lau"],
+            pk_lav=pk["lav"], pk_act=pk["act"], pk_own0=pk["own0"],
+            pk_mask=pk_mask,
+            op_stub=z_o, op_vert=z_o.copy(), op_la=z_o.copy(),
+            op_comp=z_o.copy(), op_own0=z_o.copy(),
+            op_mask=np.zeros((n, oc), dtype=bool),
+            tc_s1=z_t, tc_s2=z_t.copy(), tc_vert=z_t.copy(),
+            tc_la=z_t.copy(), tc_comp=z_t.copy(), tc_own0=z_t.copy(),
+            tc_mask=np.zeros((n, tc), dtype=bool),
+            le_eid=le["eid"], le_u=le["u"], le_v=le["v"],
+            le_lau=le["lau"], le_lav=le["lav"], le_mask=le_mask,
+        )
+        state = jax.tree.map(jnp.asarray, state)
+        return state, anc_table
+
+    # ------------------------------------------------------------------
+    # the superstep program
+    # ------------------------------------------------------------------
+    def make_superstep(self):
+        """One jitted shard_map program serving every level."""
+        n, c = self.n, self.caps
+        axes = self.axes
+        osc = c.open_ship_cap or c.open_cap
+        tsc = c.touch_ship_cap or c.touch_cap
+        p1caps = c.phase1()
+        deferred = self.deferred_transfer
+
+        def device_fn(level, anc, state: EngineState) -> StepOut:
+            state = jax.tree.map(lambda x: x[0], state)  # [1,·] → [·]
+            me = jax.lax.axis_index(axes).astype(I32)
+            lvl = level.astype(I32)
+            dest_row = anc[jnp.maximum(lvl - 1, 0)]      # [n] part0 → active pid
+
+            # ---- 1. ship activated parked edges ----
+            if deferred:
+                send = state.pk_mask & (state.pk_act == lvl - 1)
+            else:
+                # baseline: everything hops to the current ancestor each level
+                send = state.pk_mask
+            e_dest = dest_row[jnp.clip(state.pk_own0, 0, n - 1)]
+            e_dest = jnp.where(send, e_dest, n)
+            bufs, bmask, of1 = _route(
+                e_dest, send,
+                (state.pk_eid, state.pk_u, state.pk_v, state.pk_lau,
+                 state.pk_lav, state.pk_act, state.pk_own0),
+                n, c.ship_cap,
+            )
+            keep = state.pk_mask & ~send
+            r_eid, r_u, r_v, r_lau, r_lav, r_act, r_own0 = [
+                jax.lax.all_to_all(b, axes, 0, 0, tiled=True).reshape(-1)
+                for b in bufs
+            ]
+            r_mask = jax.lax.all_to_all(bmask, axes, 0, 0, tiled=True).reshape(-1)
+
+            if deferred:
+                arrived_now = r_mask & (r_act == lvl - 1)
+                park_back = jnp.zeros_like(r_mask)
+            else:
+                arrived_now = r_mask & (r_act == lvl - 1)
+                park_back = r_mask & (r_act > lvl - 1)
+
+            # level 0: consume the initial local edges instead
+            use_local = lvl == 0
+            ne = NewEdges(
+                eid=jnp.where(use_local,
+                              _fit(state.le_eid, c.new_cap),
+                              _fit_masked(r_eid, arrived_now, c.new_cap)),
+                u=jnp.where(use_local, _fit(state.le_u, c.new_cap),
+                            _fit_masked(r_u, arrived_now, c.new_cap)),
+                v=jnp.where(use_local, _fit(state.le_v, c.new_cap),
+                            _fit_masked(r_v, arrived_now, c.new_cap)),
+                lau=jnp.where(use_local, _fit(state.le_lau, c.new_cap),
+                              _fit_masked(r_lau, arrived_now, c.new_cap)),
+                lav=jnp.where(use_local, _fit(state.le_lav, c.new_cap),
+                              _fit_masked(r_lav, arrived_now, c.new_cap)),
+                mask=jnp.where(use_local,
+                               _fit(state.le_mask, c.new_cap, fill=False),
+                               _fit_mask(arrived_now, c.new_cap)),
+            )
+            of_new = jnp.where(
+                use_local,
+                jnp.sum(state.le_mask) > c.new_cap,
+                jnp.sum(arrived_now) > c.new_cap,
+            )
+
+            # ---- 2. ship opens + touch to their active partition ----
+            o_dest = dest_row[jnp.clip(state.op_own0, 0, n - 1)]
+            o_dest = jnp.where(lvl > 0, o_dest, me)
+            obufs, obm, of2 = _route(
+                jnp.where(state.op_mask, o_dest, n), state.op_mask,
+                (state.op_stub, state.op_vert, state.op_la, state.op_comp,
+                 state.op_own0),
+                n, osc,
+            )
+            a_stub, a_vert, a_la, a_comp, a_own0 = [
+                jax.lax.all_to_all(b, axes, 0, 0, tiled=True).reshape(-1)
+                for b in obufs
+            ]
+            a_om = jax.lax.all_to_all(obm, axes, 0, 0, tiled=True).reshape(-1)
+            (os_, ov_, ol_, oc_, oo_), om_, of3 = _compact_rows(
+                (a_stub, a_vert, a_la, a_comp, a_own0), a_om, c.open_cap
+            )
+            opens = OpenTable(os_, ov_, ol_, oc_, om_)
+
+            t_dest = dest_row[jnp.clip(state.tc_own0, 0, n - 1)]
+            t_dest = jnp.where(lvl > 0, t_dest, me)
+            tbufs, tbm, of4 = _route(
+                jnp.where(state.tc_mask, t_dest, n), state.tc_mask,
+                (state.tc_s1, state.tc_s2, state.tc_vert, state.tc_la,
+                 state.tc_comp, state.tc_own0),
+                n, tsc,
+            )
+            b_s1, b_s2, b_v, b_la, b_c, b_o0 = [
+                jax.lax.all_to_all(b, axes, 0, 0, tiled=True).reshape(-1)
+                for b in tbufs
+            ]
+            b_tm = jax.lax.all_to_all(tbm, axes, 0, 0, tiled=True).reshape(-1)
+            (ts1, ts2, tv_, tl_, tc_, to0), tm_, of5 = _compact_rows(
+                (b_s1, b_s2, b_v, b_la, b_c, b_o0), b_tm, c.touch_cap
+            )
+            touch = TouchTable(ts1, ts2, tv_, tl_, tc_, tm_)
+
+            # ---- 3. Phase 1 ----
+            out = phase1_local(ne, opens, touch, lvl, p1caps)
+
+            # ---- 4. refresh parked table ----
+            if deferred:
+                pk_fields = (state.pk_eid, state.pk_u, state.pk_v,
+                             state.pk_lau, state.pk_lav, state.pk_act,
+                             state.pk_own0)
+                (pe, pu, pv, plau, plav, pact, pown), pm, of6 = _compact_rows(
+                    pk_fields, keep, c.park_cap
+                )
+            else:
+                (pe, pu, pv, plau, plav, pact, pown), pm, of6 = _compact_rows(
+                    (r_eid, r_u, r_v, r_lau, r_lav, r_act, r_own0),
+                    park_back, c.park_cap,
+                )
+
+            # own0 for new opens/touch: level-0 partition of the vertex —
+            # recover from the shipping key: it is only needed to route to
+            # *future* ancestors, and anc_table rows are constant per
+            # partition subtree, so the current active pid (me) works as the
+            # routing key for everything created here.
+            new_oo = jnp.where(out.opens.mask, me, BIG)
+            new_to = jnp.where(out.touch.mask, me, BIG)
+
+            nstate = EngineState(
+                pk_eid=pe, pk_u=pu, pk_v=pv, pk_lau=plau, pk_lav=plav,
+                pk_act=pact, pk_own0=pown, pk_mask=pm,
+                op_stub=out.opens.stub, op_vert=out.opens.vert,
+                op_la=out.opens.la, op_comp=out.opens.comp,
+                op_own0=new_oo, op_mask=out.opens.mask,
+                tc_s1=out.touch.s1, tc_s2=out.touch.s2,
+                tc_vert=out.touch.vert, tc_la=out.touch.la,
+                tc_comp=out.touch.comp, tc_own0=new_to,
+                tc_mask=out.touch.mask,
+                le_eid=state.le_eid, le_u=state.le_u, le_v=state.le_v,
+                le_lau=state.le_lau, le_lav=state.le_lav,
+                le_mask=jnp.zeros_like(state.le_mask),
+            )
+            ship_of = of1 | of2 | of3 | of4 | of5 | of6 | of_new
+            flags = jnp.concatenate(
+                [out.flags, jnp.stack([~ship_of])]
+            )
+            metrics = jnp.stack(
+                [2 * jnp.sum(pm).astype(I32),
+                 3 * jnp.sum(out.opens.mask).astype(I32),
+                 4 * jnp.sum(out.touch.mask).astype(I32),
+                 4 * out.n_components]
+            )
+            nstate = jax.tree.map(lambda x: x[None], nstate)
+            return StepOut(
+                state=nstate,
+                log_s1=out.log_s1[None],
+                log_s2=out.log_s2[None],
+                log_mask=out.log_mask[None],
+                flags=flags[None],
+                metrics=metrics[None],
+            )
+
+        part_spec = P(axes)
+        state_specs = EngineState(*([P(axes, None)] * len(EngineState._fields)))
+        out_specs = StepOut(
+            state=state_specs,
+            log_s1=P(axes, None), log_s2=P(axes, None), log_mask=P(axes, None),
+            flags=P(axes, None), metrics=P(axes, None),
+        )
+        fn = jax.shard_map(
+            device_fn,
+            mesh=self.mesh,
+            in_specs=(P(), P(None, None), state_specs),
+            out_specs=out_specs,
+            check_vma=False,
+        )
+        return jax.jit(fn)
+
+    # ------------------------------------------------------------------
+    def run(self, pg: PartitionedGraph, validate: bool = True):
+        """Execute all supersteps on the real mesh; returns the circuit."""
+        state, anc_table = self.load(pg)
+        anc = jnp.asarray(anc_table)
+        step = self._step or self.make_superstep()
+        self._step = step
+        logs: List[Tuple[np.ndarray, np.ndarray]] = []
+        all_flags = []
+        metrics = []
+        for lvl in range(self.n_levels):
+            out = step(jnp.int32(lvl), anc, state)
+            state = out.state
+            m = np.asarray(out.log_mask)
+            s1 = np.asarray(out.log_s1)[m]
+            s2 = np.asarray(out.log_s2)[m]
+            logs.append((s1, s2))
+            all_flags.append(np.asarray(out.flags))
+            metrics.append(np.asarray(out.metrics))
+        flags = np.concatenate(all_flags, 0)
+        assert flags.all(), f"convergence/capacity flags failed: {flags.all(0)}"
+
+        # Phase 3: replay logs (level order; later writes win), final splice,
+        # list-rank.
+        E = pg.graph.num_edges
+        mate = np.full(2 * E, -1, dtype=np.int64)
+        for s1, s2 in logs:
+            keep = (s1 < 2 * E) & (s2 < 2 * E)
+            mate[s1[keep]] = s2[keep]
+            mate[s2[keep]] = s1[keep]
+        assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
+        sv = np.empty(2 * E, dtype=np.int64)
+        sv[0::2] = pg.graph.edge_u
+        sv[1::2] = pg.graph.edge_v
+        from .phase3 import circuit_from_mate_np, splice_components_np
+
+        mate = splice_components_np(mate, sv, mate >= 0)
+        circuit = circuit_from_mate_np(mate)
+        if validate:
+            from .hierholzer import validate_circuit
+
+            validate_circuit(pg.graph, circuit)
+        return circuit, metrics
+
+
+def _fit(x: jnp.ndarray, cap: int, fill=None):
+    """Pad/trim a 1-D array to ``cap`` (static)."""
+    if fill is None:
+        fill = BIG if x.dtype != jnp.bool_ else False
+    if x.shape[0] == cap:
+        return x
+    if x.shape[0] > cap:
+        return x[:cap]
+    pad = jnp.full((cap - x.shape[0],), fill, dtype=x.dtype)
+    return jnp.concatenate([x, pad])
+
+
+def _fit_masked(x: jnp.ndarray, mask: jnp.ndarray, cap: int):
+    order = jnp.argsort(~mask, stable=True)
+    return _fit(x[order], cap)
+
+
+def _fit_mask(mask: jnp.ndarray, cap: int):
+    order = jnp.argsort(~mask, stable=True)
+    return _fit(mask[order], cap, fill=False)

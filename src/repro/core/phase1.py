@@ -1,0 +1,386 @@
+"""Jitted, vectorized Phase 1 — the per-partition superstep body.
+
+TPU-native replacement for the paper's sequential Hierholzer walk (Alg. 1):
+
+  1. *pair* the stub pool (new local edges' stubs + inherited open path
+     endpoints) per vertex — sort + parity pairing.  Odd leftovers are the
+     OB path endpoints of Lemma 1; components with no leftovers are the
+     EB/internal cycles of Lemma 2.
+  2. *label* components: hook+jump (Shiloach–Vishkin-style) connected
+     components over the component-merge graph induced by the new pairs.
+  3. *splice* components sharing an owned vertex (Lemma 3 / MERGEINTO) by
+     mate rotations, with a voting scheme that gives each component at most
+     one rotation per round (safe concurrent merging); cycles merge into
+     anything, at most one path participates per rotation.
+
+Everything is static-shape and jit-compatible: masked fixed-capacity
+tables, sort-based grouping, ``segment_min`` label propagation, and
+bounded round counts with convergence flags (asserted in tests and checked
+at runtime by the engine).
+
+Component ids are *min member stub id* — globally unique and stable across
+levels and devices, so pathMaps merge without coordination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+BIG = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase1Caps:
+    open_cap: int           # max carried-forward path endpoints
+    touch_cap: int          # max representative pairs at boundary vertices
+    hook_rounds: int = 0    # 0 → ceil(log2(comp universe)) + 2
+    splice_rounds: int = 12
+    static_splice: bool = False  # unroll splice rounds (roofline analysis:
+                                 # while-loop bodies are cost-counted once)
+
+
+class OpenTable(NamedTuple):
+    stub: jnp.ndarray   # [OC] stub id
+    vert: jnp.ndarray   # [OC] vertex the stub is incident on
+    la: jnp.ndarray     # [OC] last-activation level of the vertex
+    comp: jnp.ndarray   # [OC] component id (min member stub id)
+    mask: jnp.ndarray   # [OC] bool
+
+
+class TouchTable(NamedTuple):
+    s1: jnp.ndarray     # [TC]
+    s2: jnp.ndarray     # [TC] current mate of s1 (same vertex)
+    vert: jnp.ndarray   # [TC]
+    la: jnp.ndarray     # [TC]
+    comp: jnp.ndarray   # [TC]
+    mask: jnp.ndarray   # [TC] bool
+
+
+class NewEdges(NamedTuple):
+    eid: jnp.ndarray    # [NE] global edge id
+    u: jnp.ndarray      # [NE]
+    v: jnp.ndarray      # [NE]
+    lau: jnp.ndarray    # [NE] last-activation level of u
+    lav: jnp.ndarray    # [NE] last-activation level of v
+    mask: jnp.ndarray   # [NE] bool
+
+
+class Phase1Out(NamedTuple):
+    opens: OpenTable
+    touch: TouchTable
+    log_s1: jnp.ndarray        # [PC] mate-log: mate[log_s1] = log_s2
+    log_s2: jnp.ndarray
+    log_mask: jnp.ndarray
+    n_components: jnp.ndarray  # [] live components touching this partition
+    flags: jnp.ndarray         # [3] bool: cc converged, splice converged, no overflow
+
+
+def empty_open(cap: int) -> OpenTable:
+    z = jnp.full((cap,), BIG, dtype=I32)
+    return OpenTable(z, z, z, z, jnp.zeros((cap,), bool))
+
+
+def empty_touch(cap: int) -> TouchTable:
+    z = jnp.full((cap,), BIG, dtype=I32)
+    return TouchTable(z, z, z, z, z, jnp.zeros((cap,), bool))
+
+
+def _compact(arrays, mask, cap: int):
+    """Move valid entries to the front and truncate to ``cap``."""
+    order = jnp.argsort(~mask, stable=True)
+    overflow = jnp.sum(mask) > cap
+    outs = tuple(a[order][:cap] for a in arrays)
+    return outs, mask[order][:cap], overflow
+
+
+def _seg_starts(sorted_keys, idx_dtype=I32):
+    """Index of each element's segment start, for sorted keys."""
+    n = sorted_keys.shape[0]
+    idx = jnp.arange(n, dtype=idx_dtype)
+    newseg = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    return jax.lax.associative_scan(jnp.maximum, jnp.where(newseg, idx, 0))
+
+
+def _cc_hook_jump(ca, cb, emask, universe, rounds: int):
+    """Min-label connected components over a value-keyed graph.
+
+    Nodes are the values in ``universe`` ([K], BIG-padded); edges are
+    (ca[i], cb[i]) where ``emask[i]``.  Returns (sorted universe,
+    root *value* per universe slot, converged flag).
+    """
+    K = universe.shape[0]
+    uniq = jnp.sort(universe)
+    ia = jnp.clip(jnp.searchsorted(uniq, jnp.where(emask, ca, BIG)), 0, K - 1).astype(I32)
+    ib = jnp.clip(jnp.searchsorted(uniq, jnp.where(emask, cb, BIG)), 0, K - 1).astype(I32)
+    ia = jnp.where(emask, ia, K - 1)
+    ib = jnp.where(emask, ib, K - 1)
+    lab = jnp.arange(K, dtype=I32)
+
+    def hook(lab, ea, eb):
+        m = jnp.minimum(lab[ea], lab[eb])
+        both = jnp.concatenate([m, m])
+        tgt = jnp.concatenate([ea, eb])
+        return jnp.minimum(lab, jax.ops.segment_min(both, tgt, num_segments=K))
+
+    # Unrolled python loop (rounds is static): keeps every round visible to
+    # cost_analysis — while/fori bodies are otherwise counted once, which
+    # would hide O(log K) of the superstep's work from the roofline.
+    ea, eb = ia, ib
+    for _ in range(rounds):
+        lab = hook(lab, ea, eb)
+        lab = lab[lab]
+        lab = lab[lab]
+        # Borůvka-style edge contraction: relabel endpoints to super-nodes
+        # so the next hook propagates between contracted components —
+        # this is what makes convergence O(log K) instead of O(diameter).
+        ea, eb = lab[ea], lab[eb]
+    converged = jnp.all(hook(lab, ea, eb) == lab)
+    return uniq, uniq[lab], converged
+
+
+def _value_lookup(uniq, root_val, values):
+    """Map values through (uniq → root_val); identity for missing values."""
+    j = jnp.clip(jnp.searchsorted(uniq, values), 0, uniq.shape[0] - 1).astype(I32)
+    return jnp.where(uniq[j] == values, root_val[j], values)
+
+
+def phase1_local(
+    new: NewEdges,
+    opens: OpenTable,
+    touch: TouchTable,
+    level: jnp.ndarray,
+    caps: Phase1Caps,
+) -> Phase1Out:
+    """One partition's Phase 1 at one level.  Fully jittable."""
+    # ------------------------------------------------------------------
+    # 1. stub pool = new edges' stubs + inherited open endpoints
+    # ------------------------------------------------------------------
+    nm, om = new.mask, opens.mask
+    pool_stub = jnp.concatenate(
+        [jnp.where(nm, 2 * new.eid, BIG), jnp.where(nm, 2 * new.eid + 1, BIG),
+         jnp.where(om, opens.stub, BIG)]
+    )
+    pool_vert = jnp.concatenate(
+        [jnp.where(nm, new.u, BIG), jnp.where(nm, new.v, BIG),
+         jnp.where(om, opens.vert, BIG)]
+    )
+    pool_la = jnp.concatenate(
+        [jnp.where(nm, new.lau, 0), jnp.where(nm, new.lav, 0),
+         jnp.where(om, opens.la, 0)]
+    )
+    pool_comp = jnp.concatenate(
+        [jnp.where(nm, 2 * new.eid, BIG), jnp.where(nm, 2 * new.eid, BIG),
+         jnp.where(om, opens.comp, BIG)]
+    )
+    pool_mask = jnp.concatenate([nm, nm, om])
+    P = pool_stub.shape[0]
+
+    # ------------------------------------------------------------------
+    # 2. pair per vertex: sort by (vertex, stub), pair consecutive
+    # ------------------------------------------------------------------
+    vkey = jnp.where(pool_mask, pool_vert, BIG)
+    # §Perf (euler H-E1'): drop the stub tiebreak key — stable argsort is
+    # already deterministic — one sort pass instead of lexsort's two
+    order = jnp.argsort(vkey, stable=True)
+    sv, ss = vkey[order], pool_stub[order]
+    sc, sl, sm = pool_comp[order], pool_la[order], pool_mask[order]
+    pos = jnp.arange(P, dtype=I32) - _seg_starts(sv)
+    nxt_same = jnp.concatenate([sv[1:] == sv[:-1], jnp.zeros((1,), bool)])
+    has_partner = (pos % 2 == 0) & sm & (sv < BIG) & nxt_same
+    pr_a = jnp.where(has_partner, ss, BIG)
+    pr_b = jnp.where(has_partner, jnp.roll(ss, -1), BIG)
+    pr_v = jnp.where(has_partner, sv, BIG)
+    pr_la = jnp.where(has_partner, sl, 0)
+    pr_ca = jnp.where(has_partner, sc, BIG)
+    pr_cb = jnp.where(has_partner, jnp.roll(sc, -1), BIG)
+    pr_mask = has_partner
+    paired = has_partner | jnp.concatenate([jnp.zeros((1,), bool), has_partner[:-1]])
+    left_mask = sm & ~paired & (sv < BIG)
+
+    # ------------------------------------------------------------------
+    # 3. component labels after pairing (hook + jump CC over comp values)
+    # ------------------------------------------------------------------
+    universe = jnp.concatenate(
+        [jnp.where(sm, sc, BIG), jnp.where(touch.mask, touch.comp, BIG)]
+    )
+    uniq, root_val, cc_ok = _cc_hook_jump(
+        pr_ca, pr_cb, pr_mask, universe,
+        caps.hook_rounds or int(math.ceil(math.log2(max(2, universe.shape[0])))) + 2,
+    )
+    open_comp = _value_lookup(uniq, root_val, jnp.where(left_mask, sc, BIG))
+    pair_comp = _value_lookup(uniq, root_val, pr_ca)
+    touch_comp = _value_lookup(uniq, root_val,
+                               jnp.where(touch.mask, touch.comp, BIG))
+
+    # ------------------------------------------------------------------
+    # 4. unified pair table (this level's pairs + inherited touch pairs)
+    # ------------------------------------------------------------------
+    q_s1 = jnp.concatenate([pr_a, jnp.where(touch.mask, touch.s1, BIG)])
+    q_s2 = jnp.concatenate([pr_b, jnp.where(touch.mask, touch.s2, BIG)])
+    q_v = jnp.concatenate([pr_v, jnp.where(touch.mask, touch.vert, BIG)])
+    q_la = jnp.concatenate([pr_la, jnp.where(touch.mask, touch.la, 0)])
+    q_c = jnp.concatenate([pair_comp, touch_comp])
+    q_m = jnp.concatenate([pr_mask, touch.mask])
+    # §Perf (euler H-E2): at most half the pool can pair, so compact the
+    # pair table to P//2 + TC before the splice loop — every subsequent
+    # round (sorts, segment ops, relabels) streams half the rows.
+    (q_s1, q_s2, q_v, q_la, q_c), q_m, _ = _compact(
+        (q_s1, q_s2, q_v, q_la, q_c), q_m,
+        pool_stub.shape[0] // 2 + touch.mask.shape[0],
+    )
+    PC = q_s1.shape[0]
+    q_c_pre = q_c          # pre-splice comps of the compacted pair table
+
+    oc = jnp.sort(open_comp)  # sorted open comps (BIG-padded) for path tests
+
+    def is_path(comps, oc_sorted):
+        j = jnp.clip(jnp.searchsorted(oc_sorted, comps), 0,
+                     oc_sorted.shape[0] - 1).astype(I32)
+        return (oc_sorted[j] == comps) & (comps < BIG)
+
+    # ------------------------------------------------------------------
+    # 5. splice rounds
+    # ------------------------------------------------------------------
+    def splice_round(state):
+        s2, cmp_, oc_sorted, _, rounds_left = state
+        vm = jnp.where(q_m, q_v, BIG)
+        order2 = jnp.lexsort((cmp_, vm))   # H-E1': s1 tiebreak dropped
+        gv, gc = vm[order2], cmp_[order2]
+        gs2 = s2[order2]
+        gm = q_m[order2]
+        dup = jnp.concatenate(
+            [jnp.zeros((1,), bool), (gv[1:] == gv[:-1]) & (gc[1:] == gc[:-1])]
+        )
+        rep = gm & ~dup & (gv < BIG)
+        seg = _seg_starts(gv)
+        n = gv.shape[0]
+        gpath = is_path(gc, oc_sorted) & rep
+        n_rep = jax.ops.segment_sum(rep.astype(I32), seg, num_segments=n)
+        n_cyc = jax.ops.segment_sum((rep & ~gpath).astype(I32), seg,
+                                    num_segments=n)
+        cand = rep & (n_rep[seg] >= 2) & (n_cyc[seg] >= 1)
+        # each comp votes for its min candidate vertex
+        K = uniq.shape[0]
+        ci = jnp.clip(jnp.searchsorted(uniq, gc), 0, K - 1).astype(I32)
+        vote = jax.ops.segment_min(jnp.where(cand, gv, BIG), ci, num_segments=K)
+        voted = cand & (vote[ci] == gv)
+        # at most one path per vertex: cycles + the min-comp voted path
+        pthmin = jax.ops.segment_min(
+            jnp.where(voted & gpath, gc, BIG), seg, num_segments=n
+        )
+        take = voted & (~gpath | (gc == pthmin[seg]))
+        n_take = jax.ops.segment_sum(take.astype(I32), seg, num_segments=n)
+        act = take & (n_take[seg] >= 2)
+        # rotation among act members, circular within vertex segment
+        akey = jnp.where(act, gv, BIG)
+        o4 = jnp.argsort(akey, stable=True)
+        hv, hs2, hc = akey[o4], gs2[o4], gc[o4]
+        hm = act[o4]
+        hstart = _seg_starts(hv)
+        hlast = jnp.concatenate([hv[1:] != hv[:-1], jnp.ones((1,), bool)])
+        hnxt = jnp.clip(jnp.where(hlast, hstart, jnp.arange(n, dtype=I32) + 1),
+                        0, n - 1)
+        rot_s2 = jnp.where(hm, hs2[hnxt], hs2)
+        minc = jax.ops.segment_min(jnp.where(hm, hc, BIG), hstart, num_segments=n)
+        rot_c = jnp.where(hm, minc[hstart], hc)
+        changed = jnp.any(hm)
+        # single unsort: active-space position p ↦ original index order2[o4[p]]
+        orig = order2[o4]
+        s2_new = jnp.zeros_like(s2).at[orig].set(rot_s2)
+        did = jnp.zeros_like(q_m).at[orig].set(hm)
+        s2_new = jnp.where(did, s2_new, s2)
+        # comp relabel map (from → min comp at its rotation vertex)
+        mfrom = jnp.where(hm, hc, BIG)
+        mto = jnp.where(hm, rot_c, BIG)
+        mo = jnp.argsort(mfrom, stable=True)
+        mfrom, mto = mfrom[mo], mto[mo]
+
+        def relabel(vals):
+            j = jnp.clip(jnp.searchsorted(mfrom, vals), 0, n - 1).astype(I32)
+            return jnp.where(mfrom[j] == vals, mto[j], vals)
+
+        cmp_new = relabel(cmp_)
+        oc_new = jnp.sort(relabel(oc_sorted))
+        return s2_new, cmp_new, oc_new, changed, rounds_left - 1
+
+    def cond(state):
+        return state[3] & (state[4] > 0)
+
+    init = (q_s2, q_c, oc, jnp.array(True),
+            jnp.array(caps.splice_rounds, I32))
+    if caps.static_splice:
+        state = init
+        for _ in range(caps.splice_rounds):
+            state = splice_round(state)
+        q_s2, q_c, oc, still_changing, _ = state
+        splice_ok = jnp.array(True)   # fixed rounds; flag checked by tests
+    else:
+        q_s2, q_c, oc, still_changing, _ = jax.lax.while_loop(
+            cond, splice_round, init
+        )
+        splice_ok = ~still_changing
+
+    # ------------------------------------------------------------------
+    # 6. rebuild tables
+    # ------------------------------------------------------------------
+    # Recover per-stub open comps: splice relabels are strictly decreasing
+    # (from → min of merged set), so CC over (pre-splice comp → final comp)
+    # pairs has the final label as its min — a single hook/jump pass maps
+    # every original comp to its final id.
+    uniq3, root3, cc3_ok = _cc_hook_jump(
+        q_c_pre,
+        q_c,
+        q_m,
+        jnp.concatenate([universe, jnp.where(q_m, q_c, BIG)]),
+        caps.hook_rounds or int(
+            math.ceil(math.log2(max(2, 2 * universe.shape[0])))) + 2,
+    )
+    open_comp_final = _value_lookup(uniq3, root3, open_comp)
+
+    (o_stub, o_vert, o_la, o_comp), o_mask, open_of = _compact(
+        (jnp.where(left_mask, ss, BIG), jnp.where(left_mask, sv, BIG),
+         jnp.where(left_mask, sl, 0), open_comp_final),
+        left_mask, caps.open_cap,
+    )
+    new_opens = OpenTable(o_stub, o_vert, o_la, o_comp, o_mask)
+
+    # touch = pairs at vertices that still activate later, dedup (v, comp)
+    keep = q_m & (q_la > level)
+    tv = jnp.where(keep, q_v, BIG)
+    tc = jnp.where(keep, q_c, BIG)
+    ot = jnp.lexsort((tc, tv))             # H-E1': s1 tiebreak dropped
+    dv, dc = tv[ot], tc[ot]
+    dup2 = jnp.concatenate(
+        [jnp.zeros((1,), bool), (dv[1:] == dv[:-1]) & (dc[1:] == dc[:-1])]
+    )
+    tm = keep[ot] & ~dup2
+    (t_s1, t_s2, t_v, t_la, t_c), t_m, touch_of = _compact(
+        (q_s1[ot], q_s2[ot], q_v[ot], q_la[ot], q_c[ot]), tm, caps.touch_cap
+    )
+    new_touch = TouchTable(t_s1, t_s2, t_v, t_la, t_c, t_m)
+
+    live = jnp.sort(jnp.concatenate(
+        [jnp.where(o_mask, o_comp, BIG), jnp.where(t_m, t_c, BIG)]
+    ))
+    n_comp = jnp.sum(
+        (live < BIG)
+        & jnp.concatenate([jnp.ones((1,), bool), live[1:] != live[:-1]])
+    )
+
+    flags = jnp.stack([cc_ok & cc3_ok, splice_ok, ~(open_of | touch_of)])
+    return Phase1Out(
+        opens=new_opens,
+        touch=new_touch,
+        log_s1=jnp.where(q_m, q_s1, BIG),
+        log_s2=jnp.where(q_m, q_s2, BIG),
+        log_mask=q_m,
+        n_components=n_comp.astype(I32),
+        flags=flags,
+    )

@@ -1,0 +1,153 @@
+"""Phase 3: unroll the pairing structure into the final Euler circuit.
+
+The paper defers Phase 3 to future work; we implement it.  After all merge
+levels, every stub has a mate (perfect matching per vertex) and the
+(sibling ∘ mate) permutation's orbit through any stub is the full circuit.
+Emission is *list ranking* by pointer doubling — O(log E) depth, fully
+vectorized — rather than the paper's sequential disk unroll.
+
+Both a NumPy (host/oracle) and a JAX (device) implementation live here;
+they share semantics and are cross-checked in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def circuit_from_mate_np(mate: np.ndarray, start_stub: int = -1) -> np.ndarray:
+    """NumPy list-ranking: emit the circuit as arrival stubs in walk order.
+
+    ``mate[s]`` is the stub paired with ``s`` at their shared vertex; the
+    walk arriving at stub ``s`` departs via ``mate[s]`` and next arrives at
+    ``mate[s] ^ 1``.  Requires a single orbit covering E stubs (one circuit).
+    """
+    n_stubs = mate.shape[0]
+    E = n_stubs // 2
+    valid = mate >= 0
+    if start_stub < 0:
+        start_stub = int(np.nonzero(valid)[0][0])
+    nxt = np.where(valid, mate ^ 1, np.arange(n_stubs))
+
+    # Halt node: predecessor of start — t such that nxt[t] == start.
+    t = int(mate[start_stub ^ 1])
+    ptr = nxt.copy()
+    ptr[t] = t
+    dist = np.ones(n_stubs, dtype=np.int64)
+    dist[t] = 0
+    reach = np.zeros(n_stubs, dtype=bool)
+    reach[t] = True
+    rounds = int(np.ceil(np.log2(max(2, n_stubs)))) + 1
+    for _ in range(rounds):
+        dist = dist + dist[ptr]
+        reach = reach | reach[ptr]
+        ptr = ptr[ptr]
+
+    orbit = np.nonzero(reach & valid)[0]
+    order = orbit[np.argsort(-dist[orbit], kind="stable")]
+    return order.astype(np.int64)
+
+
+def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray) -> jnp.ndarray:
+    """JAX list-ranking twin of :func:`circuit_from_mate_np`.
+
+    Returns arrival stubs in walk order, padded with -1 where ``mate`` is
+    invalid (padding slots).  Static shapes: output has ``len(mate)//2``
+    entries (E slots).
+    """
+    n_stubs = mate.shape[0]
+    iota = jnp.arange(n_stubs, dtype=mate.dtype)
+    valid = mate >= 0
+    nxt = jnp.where(valid, mate ^ 1, iota)
+
+    t = mate[start_stub ^ 1]
+    ptr = nxt.at[t].set(t)
+    dist = jnp.ones(n_stubs, dtype=jnp.int32).at[t].set(0)
+    reach = jnp.zeros(n_stubs, dtype=bool).at[t].set(True)
+    rounds = int(np.ceil(np.log2(max(2, n_stubs)))) + 1
+
+    def body(_, carry):
+        dist, reach, ptr = carry
+        dist = dist + dist[ptr]
+        reach = reach | reach[ptr]
+        ptr = ptr[ptr]
+        return dist, reach, ptr
+
+    dist, reach, ptr = jax.lax.fori_loop(0, rounds, body, (dist, reach, ptr))
+
+    on_orbit = reach & valid
+    # Sort stubs by descending dist among orbit members; non-members last.
+    key = jnp.where(on_orbit, -dist, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)
+    E = n_stubs // 2
+    out = order[:E].astype(jnp.int32)
+    member = on_orbit[out]
+    return jnp.where(member, out, -1)
+
+
+def splice_components_np(
+    mate: np.ndarray,
+    stub_vertex: np.ndarray,
+    valid: np.ndarray,
+) -> np.ndarray:
+    """Final pivot splice (host): merge remaining edge-disjoint cycles that
+    cross only at already-consumed vertices, by mate rotations — the same
+    operation the paper's Phase 3 performs when it "switches to a different
+    cycle at the pivot vertex".  Returns the updated mate array."""
+    from scipy.sparse import coo_matrix
+    from scipy.sparse.csgraph import connected_components
+
+    mate = mate.copy()
+    n_stubs = mate.shape[0]
+    idx = np.nonzero(valid)[0]
+    for _ in range(64):
+        # components over sibling + mate links
+        sib_u = idx
+        sib_v = idx ^ 1
+        mat_u = idx
+        mat_v = mate[idx]
+        rows = np.concatenate([sib_u, mat_u])
+        cols = np.concatenate([sib_v, mat_v])
+        g = coo_matrix(
+            (np.ones(len(rows), np.int8), (rows, cols)), shape=(n_stubs, n_stubs)
+        )
+        ncomp, labels = connected_components(g, directed=False)
+        live = np.unique(labels[idx])
+        if len(live) <= 1:
+            break
+        # one representative pair per (component, vertex); rotate per vertex
+        s = idx[mate[idx] > idx]  # one canonical stub per mate-pair
+        v = stub_vertex[s]
+        comp = labels[s]
+        order = np.lexsort((comp, v))
+        s, v, comp = s[order], v[order], comp[order]
+        first = np.ones(len(s), dtype=bool)
+        first[1:] = (v[1:] != v[:-1]) | (comp[1:] != comp[:-1])
+        s, v, comp = s[first], v[first], comp[first]
+        # vertices hosting >= 2 distinct comps
+        vstart = np.ones(len(v), dtype=bool)
+        vstart[1:] = v[1:] != v[:-1]
+        vseg = np.cumsum(vstart) - 1
+        seg_sizes = np.bincount(vseg)
+        merged_any = False
+        done = set()
+        for seg in np.nonzero(seg_sizes >= 2)[0]:
+            members = np.nonzero(vseg == seg)[0]
+            comps = comp[members]
+            if any(c in done for c in comps):
+                continue  # one rotation per comp per round
+            done.update(int(c) for c in comps)
+            reps = s[members]
+            mates = mate[reps]
+            # rotate: mate[a_i] <- b_{i+1}
+            for i in range(len(reps)):
+                a = reps[i]
+                b = mates[(i + 1) % len(reps)]
+                mate[a] = b
+                mate[b] = a
+            merged_any = True
+        if not merged_any:
+            break
+    return mate

@@ -1,0 +1,123 @@
+"""Graph partitioner: BFS region-growing with vertex-count balancing.
+
+The paper uses ParHIP externally; our built-in partitioner serves the same
+role (min edge-cut, load-balanced parts) without external dependencies.
+BFS region growing from spread seeds gives connected, balanced parts on the
+RMAT graphs used here; benchmarks report edge-cut % and imbalance like
+Table 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.graph import Graph
+
+
+def _csr(graph: Graph):
+    V, E = graph.num_vertices, graph.num_edges
+    deg = graph.degrees()
+    offsets = np.zeros(V + 1, dtype=np.int64)
+    np.cumsum(deg, out=offsets[1:])
+    nbr = np.empty(2 * E, dtype=np.int64)
+    pos = offsets[:-1].copy()
+    # vectorized fill via argsort of stub vertices
+    stub_vert = np.empty(2 * E, dtype=np.int64)
+    stub_vert[0::2] = graph.edge_u
+    stub_vert[1::2] = graph.edge_v
+    order = np.argsort(stub_vert, kind="stable")
+    other = np.empty(2 * E, dtype=np.int64)
+    other[0::2] = graph.edge_v
+    other[1::2] = graph.edge_u
+    nbr = other[order]
+    return offsets, nbr
+
+
+def bfs_partition(graph: Graph, num_parts: int, seed: int = 0) -> np.ndarray:
+    """Grow ``num_parts`` regions breadth-first with a per-part size cap."""
+    rng = np.random.default_rng(seed)
+    V = graph.num_vertices
+    offsets, nbr = _csr(graph)
+    cap = int(np.ceil(V / num_parts))
+    part = -np.ones(V, dtype=np.int64)
+    sizes = np.zeros(num_parts, dtype=np.int64)
+
+    from collections import deque
+
+    frontiers = [deque() for _ in range(num_parts)]
+    seeds = rng.permutation(V)[:num_parts]
+    for p, s in enumerate(seeds):
+        part[s] = p
+        sizes[p] = 1
+        frontiers[p].append(int(s))
+
+    unassigned = V - num_parts
+    stalled = 0
+    while unassigned > 0:
+        progressed = False
+        for p in range(num_parts):
+            if sizes[p] >= cap or not frontiers[p]:
+                continue
+            v = frontiers[p].popleft()
+            for w in nbr[offsets[v] : offsets[v + 1]]:
+                if part[w] < 0 and sizes[p] < cap:
+                    part[w] = p
+                    sizes[p] += 1
+                    unassigned -= 1
+                    frontiers[p].append(int(w))
+                    progressed = True
+            if frontiers[p] and part[frontiers[p][0]] >= 0:
+                pass
+        if not progressed:
+            stalled += 1
+            if stalled > 2:
+                # Disconnected leftovers: assign to smallest parts round-robin.
+                left = np.nonzero(part < 0)[0]
+                for v in left:
+                    p = int(np.argmin(sizes))
+                    part[v] = p
+                    sizes[p] += 1
+                    frontiers[p].append(int(v))
+                unassigned = 0
+        else:
+            stalled = 0
+    return part
+
+
+def refine_partition(graph: Graph, part: np.ndarray, rounds: int = 2) -> np.ndarray:
+    """Greedy boundary refinement (KL-lite): move a vertex to the neighbour
+    majority partition when it reduces the cut and keeps balance."""
+    V = graph.num_vertices
+    num_parts = int(part.max()) + 1
+    cap = int(np.ceil(V / num_parts) * 1.05)
+    offsets, nbr = _csr(graph)
+    part = part.copy()
+    sizes = np.bincount(part, minlength=num_parts)
+    for _ in range(rounds):
+        moved = 0
+        pu = part[graph.edge_u]
+        pv = part[graph.edge_v]
+        boundary = np.unique(
+            np.concatenate([graph.edge_u[pu != pv], graph.edge_v[pu != pv]])
+        )
+        for v in boundary:
+            neigh = nbr[offsets[v] : offsets[v + 1]]
+            if len(neigh) == 0:
+                continue
+            counts = np.bincount(part[neigh], minlength=num_parts)
+            best = int(np.argmax(counts))
+            cur = int(part[v])
+            if best != cur and counts[best] > counts[cur] and sizes[best] < cap:
+                part[v] = best
+                sizes[best] += 1
+                sizes[cur] -= 1
+                moved += 1
+        if moved == 0:
+            break
+    return part
+
+
+def partition_vertices(graph: Graph, num_parts: int, seed: int = 0) -> np.ndarray:
+    if num_parts <= 1:
+        return np.zeros(graph.num_vertices, dtype=np.int64)
+    part = bfs_partition(graph, num_parts, seed=seed)
+    return refine_partition(graph, part)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: one pointer-doubling round (the Phase-1/Phase-3 hot
+loop of the Euler engine).
+
+  nxt' = nxt[nxt]          (jump)
+  lab' = min(lab, lab[nxt])  (min-label propagation)
+
+TPU adaptation: random gathers have no VMEM-tiled locality, so the kernel
+keeps the *jump table* resident — the grid tiles the query vector while
+the full `nxt`/`lab` tables stream once into VMEM as a second operand
+block (valid for tables ≤ a few M entries; the distributed engine's
+per-partition tables are capacity-bounded exactly so this holds).  Gathers
+execute on the VPU via dynamic indexing into the resident block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_nxt_ref, q_lab_ref, tbl_nxt_ref, tbl_lab_ref,
+            o_nxt_ref, o_lab_ref):
+    qn = q_nxt_ref[...]
+    ql = q_lab_ref[...]
+    tn = tbl_nxt_ref[...]
+    tl = tbl_lab_ref[...]
+    o_nxt_ref[...] = tn[qn]
+    o_lab_ref[...] = jnp.minimum(ql, tl[qn])
+
+
+def pointer_double(nxt: jnp.ndarray, lab: jnp.ndarray,
+                   block: int = 2048, interpret: bool = True):
+    """One doubling round over the full table.  nxt/lab [N] int32;
+    entries must satisfy 0 ≤ nxt[i] < N."""
+    N = nxt.shape[0]
+    while N % block:
+        block //= 2
+    grid = (N // block,)
+    out_shape = (
+        jax.ShapeDtypeStruct((N,), nxt.dtype),
+        jax.ShapeDtypeStruct((N,), lab.dtype),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),    # queries tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((N,), lambda i: (0,)),        # resident jump table
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(nxt, lab, nxt, lab)

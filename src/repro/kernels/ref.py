@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_sum_sorted_ref(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                           num_segments: int) -> jnp.ndarray:
+    """values [N, D], seg_ids [N] sorted ascending (padding = num_segments)."""
+    return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments + 1,
+                               indices_are_sorted=True)[:num_segments]
+
+
+def pointer_double_ref(nxt: jnp.ndarray, lab: jnp.ndarray):
+    """One pointer-doubling round: lab' = min(lab, lab[nxt]); nxt' = nxt[nxt]."""
+    return nxt[nxt], jnp.minimum(lab, lab[nxt])
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q [B,S,H,D], k/v [B,T,H,D] (same head count — GQA is handled by the
+    wrapper repeating kv heads)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(D)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None] + (T - S)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)

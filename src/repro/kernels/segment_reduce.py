@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: sorted-segment sum over feature rows.
+
+The hot scatter of the whole system: GNN message aggregation, the recsys
+EmbeddingBag, and the Euler engine's per-vertex stub reductions all reduce
+rows of a [N, D] value matrix by a *sorted* segment-id vector.
+
+TPU adaptation (vs. the CUDA atomics a GPU implementation would use): the
+MXU/VPU has no atomics — instead each grid step owns a contiguous block of
+rows, accumulates locally in VMEM, and writes non-overlapping segment
+slices; the only cross-block hazard is the segment spanning a block
+boundary, which is resolved by accumulating *partial* sums per block into
+the output with input-order grid iteration (TPU grid steps on the same
+core run sequentially, so read-modify-write of the boundary row is safe).
+
+Block shapes: rows_per_block × D tiles sized for VMEM (D padded to 128
+lanes by the caller).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(seg_ref, val_ref, out_ref, *, rows: int, num_segments: int):
+    """One grid step: rows [rows, D] with their segment ids.
+
+    The output block (the full [num_segments, D] accumulator) stays
+    resident in VMEM across grid steps — TPU grid steps execute
+    sequentially on a core, so `out += partial` is race-free; this is the
+    TPU substitute for the atomics a CUDA segment-sum would use.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg = seg_ref[...]              # [rows] int32 (sorted)
+    vals = val_ref[...]             # [rows, D]
+    # accumulate rows into their segment slot with a VMEM-local one-hot
+    # matmul on the MXU: out[s] += Σ_r (seg[r] == s) · vals[r]
+    onehot = (seg[None, :] == jnp.arange(num_segments)[:, None])
+    acc = jnp.dot(onehot.astype(vals.dtype), vals,
+                  preferred_element_type=jnp.float32)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def segment_sum_sorted(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                       num_segments: int, rows_per_block: int = 512,
+                       interpret: bool = True) -> jnp.ndarray:
+    """values [N, D] float, seg_ids [N] int32 sorted ascending; ids ≥
+    num_segments are treated as padding.  Returns [num_segments, D]."""
+    N, D = values.shape
+    while N % rows_per_block:
+        rows_per_block //= 2
+    grid = (N // rows_per_block,)
+
+    seg_clipped = jnp.where(seg_ids < num_segments, seg_ids,
+                            num_segments).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, rows=rows_per_block,
+                               num_segments=num_segments + 1)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block,), lambda i: (i,)),
+            pl.BlockSpec((rows_per_block, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments + 1, D), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments + 1, D), jnp.float32),
+        interpret=interpret,
+    )(seg_clipped, values)
+    return out[:num_segments].astype(values.dtype)

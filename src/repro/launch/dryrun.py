@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production mesh, print memory_analysis + cost_analysis, and collect the
+roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-7b \
+        --shape train_4k [--multi-pod] [--json out.json]
+
+With no --arch: sweep every registered architecture × shape (the 40-cell
+grid + the paper's own euler-rmat superstep).  Skipped cells (e.g.
+long_500k on full-attention archs) are reported as SKIP with the reason.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b"
+)
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (≈ per-chip usable per direction)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the (SPMD, per-device)
+    HLO.  Shapes like ``bf16[8,128,2048]`` on the op's result line."""
+    out: Dict[str, float] = {}
+    dtype_bytes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+        "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+    }
+    shape_re = re.compile(
+        r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64|s16|u16)\[([0-9,]*)\]"
+    )
+    op_re = re.compile(
+        r"=\s*(?:\([^)]*\)|\S+)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\("
+    )
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # result shape(s): between '=' and the op keyword
+        seg = line.split("=", 1)[1].split(kind)[0]
+        total = 0.0
+        for dt, dims in shape_re.findall(seg):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            total += n * dtype_bytes[dt]
+        out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def analyse(compiled, lowered, model_flops: float, n_chips: int) -> Dict:
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    hlo_flops = float(ca.get("flops", 0.0))             # per device
+    hlo_bytes = float(ca.get("bytes accessed", 0.0))    # per device
+    mem = compiled.memory_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    coll_bytes = sum(coll.values())                     # per device
+    t_compute = hlo_flops / PEAK_FLOPS
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "per_device": {
+            "hlo_flops": hlo_flops,
+            "hlo_bytes": hlo_bytes,
+            "collective_bytes": coll_bytes,
+            "collectives": coll,
+        },
+        "terms_s": {
+            "compute": t_compute,
+            "memory": t_memory,
+            "collective": t_coll,
+        },
+        "dominant": dominant,
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_fraction": (model_flops / n_chips) / hlo_flops
+        if hlo_flops else 0.0,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes),
+        },
+    }
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool,
+             verbose: bool = True) -> Optional[Dict]:
+    from ..configs.registry import get_config
+    from ..launch.mesh import make_production_mesh
+    from ..launch.steps import SkippedCell, build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    arch = get_config(arch_id)
+    try:
+        cell = build_cell(arch, shape, mesh)
+    except SkippedCell as e:
+        if verbose:
+            print(f"[dryrun] {arch_id} × {shape} SKIP: {e}")
+        return {"arch": arch_id, "shape": shape, "skip": str(e),
+                "mesh": list(mesh.shape.values())}
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate,
+        )
+        lowered = jitted.lower(*cell.abstract_inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    rec = analyse(compiled, lowered, cell.model_flops, n_chips)
+    rec.update({
+        "arch": arch_id, "shape": shape,
+        "mesh": list(mesh.shape.values()),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    })
+    if verbose:
+        m = rec["memory"]
+        t = rec["terms_s"]
+        print(f"[dryrun] {arch_id} × {shape} mesh={rec['mesh']} OK  "
+              f"args={m['argument_bytes']/2**30:.2f}GiB "
+              f"temp={m['temp_bytes']/2**30:.2f}GiB | "
+              f"compute={t['compute']*1e3:.2f}ms mem={t['memory']*1e3:.2f}ms "
+              f"coll={t['collective']*1e3:.2f}ms → {rec['dominant']}")
+        print(f"    memory_analysis: {compiled.memory_analysis()}")
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        print(f"    cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    from ..configs.registry import ARCH_IDS, get_config
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    records = []
+    failures = []
+    for a in archs:
+        cfg = get_config(a)
+        shapes = [args.shape] if args.shape else list(cfg.shapes)
+        for s in shapes:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                try:
+                    rec = run_cell(a, s, mp)
+                    if rec:
+                        records.append(rec)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[dryrun] {a} × {s} multi_pod={mp} FAILED: {e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"\n[dryrun] {len(records)} cells OK, {len(failures)} failed")
+    if failures:
+        for f in failures:
+            print("  FAIL:", f)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: 16×16 = 256 chips, ("data","model").
+Multi-pod: 2×16×16 = 512 chips, ("pod","data","model").  The Euler engine
+flattens all axes into one partition axis; LM/GNN/recsys use data-parallel
+over ("pod","data") and TP/EP/row-sharding over "model" (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(n_devices: int = 0, tp: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = n_devices or len(jax.devices())
+    assert n % tp == 0
+    return jax.make_mesh(
+        (n // tp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def flat_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)

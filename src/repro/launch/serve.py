@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill + decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --batch 4 --prompt-len 64 --gen 32
+
+Serves the reduced config on CPU (the full configs serve identically on a
+pod via the decode cells proven by the dry-run)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs.registry import get_config
+    from ..models.transformer import (decode_step, init_kv_cache,
+                                      init_lm_params, prefill_step)
+
+    arch = get_config(args.arch, reduced=True)
+    cfg = arch.model
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    max_len = args.prompt_len + args.gen
+    prefill = jax.jit(lambda p, t: prefill_step(p, cfg, t))
+    decode = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t),
+                     donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    # widen the cache to max_len
+    full = init_kv_cache(cfg, args.batch, max_len)
+    cache = full._replace(
+        k=full.k.at[:, :, :args.prompt_len].set(cache.k),
+        v=full.v.at[:, :, :args.prompt_len].set(cache.v),
+        length=cache.length,
+    )
+    t_prefill = time.perf_counter() - t0
+
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [toks]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, cache, toks)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(toks)
+    jax.block_until_ready(toks)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack([np.asarray(t) for t in out], 1)
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill {args.batch}×{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decode {args.gen-1} steps at {tps:.1f} tok/s")
+    print("generated ids (first seq):", gen[0][:16])
+    assert gen.shape == (args.batch, args.gen)
+    return gen
+
+
+if __name__ == "__main__":
+    main()

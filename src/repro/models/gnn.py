@@ -1,0 +1,227 @@
+"""GNN stacks: GCN, GAT, PNA — segment-op message passing.
+
+JAX has no native sparse message passing; per the assignment this IS part
+of the system: aggregation is ``jax.ops.segment_sum``/``segment_max`` over
+an edge index (src→dst scatter), which is also the regime of the paper's
+partition-centric graph representation — the partitioned Euler structures
+(``core.graph``) provide the node/edge partitioning used to shard these
+models (see DESIGN.md §4).
+
+Graphs are padded: ``edge_src/edge_dst [E]`` with ``edge_mask``; masked
+edges point at a sink row (node N) that is sliced off after aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+
+
+class GraphBatch(NamedTuple):
+    node_feat: jnp.ndarray   # [N, F]
+    edge_src: jnp.ndarray    # [E]
+    edge_dst: jnp.ndarray    # [E]
+    edge_mask: jnp.ndarray   # [E]
+    node_mask: jnp.ndarray   # [N]
+    labels: jnp.ndarray      # [N] int labels (node classification)
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                 # gcn | gat | pna
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    n_heads: int = 1
+    aggregators: Tuple[str, ...] = ("mean",)
+    scalers: Tuple[str, ...] = ("identity",)
+    avg_degree: float = 4.0
+    dtype: Any = jnp.float32
+
+
+def _seg(agg: str, data, seg_ids, num_segments):
+    if agg == "sum":
+        return jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)
+    if agg == "mean":
+        s = jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)
+        c = jax.ops.segment_sum(jnp.ones_like(data[:, :1]), seg_ids,
+                                num_segments=num_segments)
+        return s / jnp.maximum(c, 1.0)
+    if agg == "max":
+        m = jax.ops.segment_max(data, seg_ids, num_segments=num_segments)
+        return jnp.where(jnp.isfinite(m), m, 0.0)  # empty segment → 0
+    if agg == "min":
+        m = -jax.ops.segment_max(-data, seg_ids, num_segments=num_segments)
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    if agg == "std":
+        s = jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)
+        s2 = jax.ops.segment_sum(data * data, seg_ids, num_segments=num_segments)
+        c = jnp.maximum(
+            jax.ops.segment_sum(jnp.ones_like(data[:, :1]), seg_ids,
+                                num_segments=num_segments), 1.0)
+        var = jnp.maximum(s2 / c - (s / c) ** 2, 0.0)
+        return jnp.sqrt(var + 1e-5)
+    raise ValueError(agg)
+
+
+# ---------------------------------------------------------------------------
+# GCN  (Kipf & Welling) — symmetric-normalized SpMM
+# ---------------------------------------------------------------------------
+
+def init_gcn_params(key, cfg: GNNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {"w": [dense_init(ks[i], dims[i], dims[i + 1], cfg.dtype)
+                  for i in range(cfg.n_layers)]}
+
+
+def gcn_forward(params, cfg: GNNConfig, g: GraphBatch):
+    N = g.node_feat.shape[0]
+    sink = N
+    src = jnp.where(g.edge_mask, g.edge_src, sink)
+    dst = jnp.where(g.edge_mask, g.edge_dst, sink)
+    # symmetric degree normalization over *both* edge directions
+    ones = g.edge_mask.astype(cfg.dtype)
+    deg = jax.ops.segment_sum(jnp.concatenate([ones, ones]),
+                              jnp.concatenate([dst, src]),
+                              num_segments=N + 1)[:N] + 1.0   # + self loop
+    dinv = jax.lax.rsqrt(deg)
+    x = g.node_feat.astype(cfg.dtype)
+    for i, w in enumerate(params["w"]):
+        h = x @ w
+        msg_src = jnp.concatenate([src, dst])
+        msg_dst = jnp.concatenate([dst, src])
+        m = h[jnp.clip(msg_src, 0, N - 1)] * \
+            dinv[jnp.clip(msg_src, 0, N - 1)][:, None]
+        m = jnp.where((msg_src < N)[:, None], m, 0)
+        agg = jax.ops.segment_sum(m, msg_dst, num_segments=N + 1)[:N]
+        x = (agg + h * dinv[:, None]) * dinv[:, None]
+        if i < len(params["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GAT  (Velickovic et al.) — SDDMM edge scores → segment softmax → SpMM
+# ---------------------------------------------------------------------------
+
+def init_gat_params(key, cfg: GNNConfig):
+    H, D = cfg.n_heads, cfg.d_hidden
+    layers = []
+    d_in = cfg.d_in
+    ks = jax.random.split(key, cfg.n_layers * 3)
+    for i in range(cfg.n_layers):
+        d_out = cfg.n_classes if i == cfg.n_layers - 1 else D
+        h = 1 if i == cfg.n_layers - 1 else H
+        layers.append({
+            "w": dense_init(ks[3 * i], d_in, h * d_out, cfg.dtype),
+            "a_src": dense_init(ks[3 * i + 1], h, d_out, cfg.dtype).T,
+            "a_dst": dense_init(ks[3 * i + 2], h, d_out, cfg.dtype).T,
+        })
+        d_in = h * d_out
+    return {"layers": layers}
+
+
+def gat_forward(params, cfg: GNNConfig, g: GraphBatch):
+    N = g.node_feat.shape[0]
+    x = g.node_feat.astype(cfg.dtype)
+    E = g.edge_src.shape[0]
+    # bidirectional + self loops
+    src = jnp.concatenate([g.edge_src, g.edge_dst, jnp.arange(N)])
+    dst = jnp.concatenate([g.edge_dst, g.edge_src, jnp.arange(N)])
+    msk = jnp.concatenate([g.edge_mask, g.edge_mask, g.node_mask])
+    for li, lp in enumerate(params["layers"]):
+        d_out = lp["a_src"].shape[0]
+        nh = (x @ lp["w"]).shape[-1] // d_out
+        feat = (x @ lp["w"]).reshape(N, nh, d_out)          # [N, H, D]
+        alpha_src = jnp.einsum("nhd,dh->nh", feat, lp["a_src"])
+        alpha_dst = jnp.einsum("nhd,dh->nh", feat, lp["a_dst"])
+        s = jnp.clip(src, 0, N - 1)
+        d = jnp.clip(dst, 0, N - 1)
+        e = jax.nn.leaky_relu(alpha_src[s] + alpha_dst[d], 0.2)  # [E, H]
+        e = jnp.where(msk[:, None], e, -1e30)
+        # segment softmax over incoming edges of each dst
+        emax = jax.ops.segment_max(e, d, num_segments=N)
+        ee = jnp.exp(e - emax[d]) * msk[:, None]
+        esum = jax.ops.segment_sum(ee, d, num_segments=N)
+        w = ee / jnp.maximum(esum[d], 1e-9)
+        m = feat[s] * w[:, :, None]
+        agg = jax.ops.segment_sum(
+            jnp.where(msk[:, None, None], m, 0), d, num_segments=N
+        )
+        x = agg.reshape(N, -1)
+        if li < len(params["layers"]) - 1:
+            x = jax.nn.elu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# PNA  (Corso et al.) — multi-aggregator × degree scalers
+# ---------------------------------------------------------------------------
+
+def init_pna_params(key, cfg: GNNConfig):
+    n_agg = len(cfg.aggregators) * len(cfg.scalers)
+    layers = []
+    d_in = cfg.d_in
+    ks = jax.random.split(key, cfg.n_layers * 2 + 1)
+    for i in range(cfg.n_layers):
+        layers.append({
+            "w_pre": dense_init(ks[2 * i], 2 * d_in, cfg.d_hidden, cfg.dtype),
+            "w_post": dense_init(ks[2 * i + 1], n_agg * cfg.d_hidden,
+                                 cfg.d_hidden, cfg.dtype),
+        })
+        d_in = cfg.d_hidden
+    return {"layers": layers,
+            "readout": dense_init(ks[-1], cfg.d_hidden, cfg.n_classes, cfg.dtype)}
+
+
+def pna_forward(params, cfg: GNNConfig, g: GraphBatch):
+    N = g.node_feat.shape[0]
+    x = g.node_feat.astype(cfg.dtype)
+    src = jnp.concatenate([g.edge_src, g.edge_dst])
+    dst = jnp.concatenate([g.edge_dst, g.edge_src])
+    msk = jnp.concatenate([g.edge_mask, g.edge_mask])
+    s = jnp.clip(src, 0, N - 1)
+    d = jnp.clip(dst, 0, N - 1)
+    deg = jax.ops.segment_sum(msk.astype(cfg.dtype), d, num_segments=N)
+    log_deg = jnp.log(deg + 1.0)
+    delta = jnp.mean(jnp.where(g.node_mask, log_deg, 0)) * N / jnp.maximum(
+        jnp.sum(g.node_mask), 1) + 1e-5
+    for lp in params["layers"]:
+        msg_in = jnp.concatenate([x[s], x[d]], axis=-1)
+        m = jax.nn.relu(msg_in @ lp["w_pre"])
+        m = jnp.where(msk[:, None], m, 0)
+        aggs = []
+        for agg in cfg.aggregators:
+            a = _seg(agg, m, d, N)
+            for scaler in cfg.scalers:
+                if scaler == "identity":
+                    aggs.append(a)
+                elif scaler == "amplification":
+                    aggs.append(a * (log_deg[:, None] / delta))
+                elif scaler == "attenuation":
+                    aggs.append(a * (delta / jnp.maximum(log_deg[:, None], 1e-5)))
+        h = jnp.concatenate(aggs, axis=-1) @ lp["w_post"]
+        x = jax.nn.relu(h) + (x if x.shape == h.shape else 0)
+    return x @ params["readout"]
+
+
+FORWARDS = {"gcn": gcn_forward, "gat": gat_forward, "pna": pna_forward}
+INITS = {"gcn": init_gcn_params, "gat": init_gat_params, "pna": init_pna_params}
+
+
+def gnn_loss(params, cfg: GNNConfig, g: GraphBatch):
+    logits = FORWARDS[cfg.kind](params, cfg, g).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(g.labels, 0, logits.shape[-1] - 1)[:, None], axis=-1
+    )[:, 0]
+    per = (logz - gold) * g.node_mask
+    return jnp.sum(per) / jnp.maximum(jnp.sum(g.node_mask), 1.0)

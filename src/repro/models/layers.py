@@ -1,0 +1,181 @@
+"""Shared neural building blocks (pure-JAX, pytree params, no framework)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (jnp reference path; the Pallas flash kernel is in kernels/)
+# ---------------------------------------------------------------------------
+
+def gqa_attention(
+    q: jnp.ndarray,          # [B, S, Hq, D]
+    k: jnp.ndarray,          # [B, T, Hkv, D]
+    v: jnp.ndarray,          # [B, T, Hkv, D]
+    causal: bool = True,
+    q_offset: Optional[jnp.ndarray] = None,   # query position offset (decode)
+    kv_len: Optional[jnp.ndarray] = None,     # valid KV prefix length
+) -> jnp.ndarray:
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, group, D)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(D)
+    t_idx = jnp.arange(T)
+    if causal:
+        s_idx = jnp.arange(S)
+        if q_offset is not None:
+            s_pos = s_idx[None, :] + q_offset[:, None]      # [B, S]
+        else:
+            s_pos = jnp.broadcast_to(s_idx[None, :], (B, S))
+        mask = t_idx[None, None, :] <= s_pos[:, :, None]     # [B, S, T]
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    if kv_len is not None:
+        valid = t_idx[None, :] < kv_len[:, None]             # [B, T]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(B, S, Hq, D)
+
+
+def auto_q_block(B: int, Hq: int, T: int, q_block_max: int,
+                 target_bytes: float = 8e9) -> int:
+    """Largest power-of-two query block whose (global) f32 score tensor
+    stays under ``target_bytes`` (≈0.25–0.5 GB/device once dp-sharded)."""
+    qb = q_block_max
+    while qb > 128 and B * Hq * qb * T * 4 > target_bytes:
+        qb //= 2
+    return qb
+
+
+def chunked_gqa_attention(
+    q: jnp.ndarray,          # [B, S, Hq, D]
+    k: jnp.ndarray,          # [B, T, Hkv, D]
+    v: jnp.ndarray,          # [B, T, Hkv, D]
+    q_block: int = 1024,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Row-blocked attention: the score tensor exists only per query block
+    (block body is checkpointed, so backward recomputes per block instead
+    of stacking all blocks' probabilities), and the S×S matrix is never
+    materialized.  The Pallas flash kernel (kernels/flash_attention.py) is
+    the TPU fast path; this is the jnp lowering used by the dry-run and
+    CPU tests."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    q_block = auto_q_block(B, Hq, T, q_block)
+    if S <= q_block:
+        return gqa_attention(q, k, v, causal=causal)
+    assert S % q_block == 0, (S, q_block)
+    group = Hq // Hkv
+    nb = S // q_block
+    qb = q.reshape(B, nb, q_block, Hkv, group, D).transpose(1, 0, 2, 3, 4, 5)
+    t_idx = jnp.arange(T)
+
+    @jax.checkpoint
+    def block(qi, bi):
+        scores = jnp.einsum("bshgd,bthd->bhgst", qi, k)
+        scores = scores.astype(jnp.float32) / np.sqrt(D)
+        if causal:
+            s_pos = bi * q_block + jnp.arange(q_block)
+            mask = t_idx[None, :] <= s_pos[:, None]
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhgst,bthd->bshgd", probs, v)
+
+    _, outs = jax.lax.scan(
+        lambda c, inp: (c, block(*inp)), None, (qb, jnp.arange(nb))
+    )
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hq, D)
+    return out
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(x: jnp.ndarray, head: jnp.ndarray,
+                          labels: jnp.ndarray, block: int = 8192):
+    """Fused lm-head + xent over row blocks: the [tokens, V] logits tensor
+    never materializes (only [block, V] per step, recomputed in backward
+    via checkpoint) — the V=152k vocab of the Qwen archs makes full logits
+    a multi-GiB per-device buffer otherwise.
+
+    x: [N, D] (flattened tokens), head: [D, V], labels: [N].
+    Returns summed (not mean) loss and the token count."""
+    N, D = x.shape
+    while N % block:
+        block //= 2
+    nb = N // block
+    xb = x.reshape(nb, block, D)
+    lb = labels.reshape(nb, block)
+
+    @jax.checkpoint
+    def one(xi, li):
+        logits = (xi @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[:, None], axis=-1)[:, 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, inp):
+        xi, li = inp
+        return acc + one(xi, li), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xb, lb))
+    return total / N

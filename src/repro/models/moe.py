@@ -1,0 +1,283 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+TPU-native (static-shape) MoE: tokens are top-k routed, sorted by expert,
+position-ranked within expert (capacity-dropped beyond C), scattered into
+an ``[E, C, D]`` buffer, batch-GEMM'd per expert, and combined back with
+router weights.  Under pjit the buffer is sharded over the ``model`` axis
+(expert parallelism) and XLA inserts the dispatch/return all-to-alls.
+
+Supports shared experts (always-on, DeepSeek/Qwen-MoE style) + routed
+experts with optional router aux load-balancing loss [Switch, GShard].
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_expert: int          # per-expert FFN hidden dim
+    n_shared: int = 0      # always-on shared experts
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    use_ep: bool = True    # expert parallelism (False → TP inside experts,
+                           # set by the launcher when E % tp_size != 0)
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    E, F = cfg.n_experts, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "w_gate": jax.random.normal(ks[1], (E, d_model, F), dtype) / np.sqrt(d_model),
+        "w_up": jax.random.normal(ks[2], (E, d_model, F), dtype) / np.sqrt(d_model),
+        "w_down": jax.random.normal(ks[3], (E, F, d_model), dtype) / np.sqrt(F),
+    }
+    if cfg.n_shared:
+        Fs = cfg.d_expert * cfg.n_shared
+        p["shared_gate"] = dense_init(ks[4], d_model, Fs, dtype)
+        p["shared_up"] = dense_init(ks[5], d_model, Fs, dtype)
+        p["shared_down"] = dense_init(ks[6], Fs, d_model, dtype)
+    return p
+
+
+def moe_ffn(
+    params: Dict,
+    x: jnp.ndarray,                # [T, D] tokens (flattened batch*seq)
+    cfg: MoEConfig,
+    capacity: Optional[int] = None,
+    ep_axis: Optional[str] = None,  # mesh axis name for expert sharding
+    dp_axes=None,                   # mesh axes the group dim shards over
+    group_tokens: int = 2048,       # dispatch-group size (per-group routing)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [T, D], aux loss scalar).
+
+    *Group-local dispatch*: tokens are split into G groups of
+    ``group_tokens`` and routed within each group independently.  The
+    scatter/gather then batches over the group dim — which shards over dp —
+    so GSPMD partitions it (a single global scatter with computed indices
+    cannot be SPMD-partitioned and replicates the full [E·C, D] buffer per
+    device).  This is the per-DP-shard routing every production MoE system
+    uses; capacity is per group.
+    """
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    if not cfg.use_ep:
+        ep_axis = None   # experts not shardable; TP lives inside d_expert
+    G = max(1, T // group_tokens)
+    while T % G:
+        G -= 1
+    Tg = T // G
+    C = capacity or max(1, int(np.ceil(Tg * K / E * cfg.capacity_factor)))
+
+    if ep_axis is not None or dp_axes is not None:
+        from jax.sharding import PartitionSpec as P
+        from jax.lax import with_sharding_constraint as wsc
+    else:
+        wsc = lambda a, s: a  # noqa: E731
+        P = lambda *a: None   # noqa: E731, N806
+
+    # §Perf iteration 1: groups shard over EVERY mesh axis, so the vmapped
+    # dispatch scatter/gather batches over a fully-partitioned dim and
+    # stays device-local (GSPMD otherwise all-gathers the K-fold token
+    # copies — and their broadcast u32 indices — in f32; see
+    # EXPERIMENTS.md §Perf/qwen3).
+    if dp_axes is not None and ep_axis is not None:
+        rows = (tuple(dp_axes) if isinstance(dp_axes, (tuple, list))
+                else (dp_axes,)) + (ep_axis,)
+    else:
+        rows = dp_axes or ep_axis
+    # few groups (decode: G=1) cannot shard over the mesh — constraining
+    # them replicates the whole dispatch (H1 follow-up, §Perf/qwen3)
+    if G < 64:
+        rows = dp_axes if G >= 16 else None
+
+    xg = wsc(x.reshape(G, Tg, D), P(rows, None, None))
+    logits = (xg.astype(jnp.float32) @ params["router"])      # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # [G, Tg, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # aux load-balancing loss (Switch): E * Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- group-local sort-based dispatch (all ops along axis 1) ----
+    flat_e = expert_idx.reshape(G, Tg * K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K)
+    )
+    flat_g = gate_vals.reshape(G, Tg * K)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    idx = jnp.broadcast_to(jnp.arange(Tg * K)[None], (G, Tg * K))
+    newseg = jnp.concatenate(
+        [jnp.ones((G, 1), bool), se[:, 1:] != se[:, :-1]], axis=1
+    )
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(newseg, idx, 0), axis=1
+    )
+    pos = idx - seg_start
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)
+
+    xs = jnp.where(keep[..., None],
+                   jnp.take_along_axis(xg, st[..., None], axis=1), 0)
+    xs = wsc(xs, P(rows, None, None))
+    buf = jnp.zeros((G, E * C + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, xs)
+    # NOTE (§Perf/qwen3 H2, refuted): resharding buf G→dp,E→ep here so the
+    # expert GEMM runs expert-parallel makes GSPMD lower the scatter/gather
+    # neighborhood as full-tensor all-reduces (275 GB/layer measured) —
+    # pjit cannot express that reshard as an all-to-all around a batched
+    # scatter.  Keeping G sharded over every axis (H1) and letting the
+    # einsum gather expert weights (~10 GB/layer) is 17× cheaper; the true
+    # EP dispatch needs shard_map (H4, EXPERIMENTS.md).
+    buf = wsc(buf[:, :-1].reshape(G, E, C, D), P(rows, None, None, None))
+
+    # ---- expert computation (grouped GEMM) ----
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = wsc(h, P(rows, None, None, None))
+    y = jnp.einsum("gecf,efd->gecd", h, params["w_down"])     # [G, E, C, D]
+    y = wsc(y, P(rows, None, None, None))
+
+    # ---- combine (batched gather + scatter-add per group) ----
+    y_flat = y.reshape(G, E * C, D)
+    safe_slot = jnp.clip(slot, 0, E * C - 1)
+    gathered = jnp.where(
+        keep[..., None],
+        jnp.take_along_axis(y_flat, safe_slot[..., None], axis=1), 0
+    )
+    gathered = wsc(gathered, P(rows, None, None))
+    weighted = gathered * sg[..., None].astype(x.dtype)
+    outg = jnp.zeros((G, Tg, D), x.dtype)
+    outg = jax.vmap(lambda o, t, w: o.at[t].add(w))(outg, st, weighted)
+    out = wsc(outg, P(rows, None, None)).reshape(T, D)
+
+    if cfg.n_shared:
+        sh = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        out = out + sh @ params["shared_down"]
+    return out, aux
+
+
+def moe_ffn_ep(params, x, cfg: MoEConfig, mesh, dp_axes, ep_axis,
+               capacity_factor: Optional[float] = None):
+    """§Perf H5: expert-parallel MoE via shard_map.
+
+    Tokens are dp-sharded and *replicated over the ep axis*; every ep rank
+    computes the (identical) routing and locally selects the (token, k)
+    pairs owned by its expert range — so the dispatch needs NO collective
+    at all.  The only per-layer collectives are the FSDP weight
+    all-gather and one psum of the [T_loc, D] partial outputs over ep.
+    This replaces pjit's ~16 GB/layer gathers (H1) with ~0.6 GB/layer.
+
+    Requires E % ep_size == 0.  Differentiable (psum transposes to psum).
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    E, K = cfg.n_experts, cfg.top_k
+    ep_size = mesh.shape[ep_axis]
+    assert E % ep_size == 0, (E, ep_size)
+    E_loc = E // ep_size
+    cf = capacity_factor or cfg.capacity_factor
+
+    def device_fn(x_loc, router, w_gate, w_up, w_down):
+        # x_loc [Tl, D] (replicated over ep); w_* are this rank's experts,
+        # with the FSDP (dp) shard of their D/F dims — gather it back.
+        w_gate = jax.lax.all_gather(w_gate, dp_axes, axis=1, tiled=True)
+        w_up = jax.lax.all_gather(w_up, dp_axes, axis=1, tiled=True)
+        w_down = jax.lax.all_gather(w_down, dp_axes, axis=2, tiled=True)
+        Tl, D = x_loc.shape
+        C = max(1, int(np.ceil(Tl * K / E * cf)))
+        r = jax.lax.axis_index(ep_axis)
+        e0 = r * E_loc
+
+        logits = x_loc.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, K)        # [Tl, K]
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32),
+                      axis=0)
+        aux = cfg.aux_loss_coef * E * jnp.sum(me * ce) / ep_size
+
+        flat_e = expert_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tl), K)
+        flat_g = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        idx = jnp.arange(Tl * K)
+        newseg = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+        seg_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(newseg, idx, 0))
+        pos = idx - seg_start
+        mine = (se >= e0) & (se < e0 + E_loc) & (pos < C)
+        slot = jnp.where(mine, (se - e0) * C + pos, E_loc * C)
+
+        xs = jnp.where(mine[:, None], x_loc[st], 0)
+        buf = jnp.zeros((E_loc * C + 1, D), x_loc.dtype).at[slot].set(xs)
+        buf = buf[:-1].reshape(E_loc, C, D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * \
+            jnp.einsum("ecd,edf->ecf", buf, w_up)
+        y = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * C, D)
+        back = jnp.where(mine[:, None],
+                         y[jnp.clip(slot, 0, E_loc * C - 1)], 0)
+        out = jnp.zeros((Tl, D), x_loc.dtype)
+        out = out.at[st].add(back * sg[:, None].astype(x_loc.dtype))
+        # partial (my experts only) → full over the ep axis
+        out = jax.lax.psum(out, ep_axis)
+        return out, jax.lax.pmean(aux, dp_axes) * ep_size
+
+    dp = tuple(dp_axes) if isinstance(dp_axes, (tuple, list)) else (dp_axes,)
+    fn = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(P(dp, None), P(None, None),
+                  P(ep_axis, dp, None), P(ep_axis, dp, None),
+                  P(ep_axis, None, dp)),
+        out_specs=(P(dp, None), P()),
+        check_vma=False,
+    )
+    out, aux = fn(x, params["router"], params["w_gate"], params["w_up"],
+                  params["w_down"])
+    if cfg.n_shared:
+        sh = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        out = out + sh @ params["shared_down"]
+    return out, aux
+
+
+def moe_ffn_reference(params, x, cfg: MoEConfig):
+    """Dense one-hot reference (O(T·E) memory) for correctness tests."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    out = jnp.zeros((T, D), x.dtype)
+    for kk in range(K):
+        e = expert_idx[:, kk]
+        g = gate_vals[:, kk]
+        h = jax.nn.silu(
+            jnp.einsum("td,tdf->tf", x, params["w_gate"][e])
+        ) * jnp.einsum("td,tdf->tf", x, params["w_up"][e])
+        y = jnp.einsum("tf,tfd->td", h, params["w_down"][e])
+        out = out + y * g[:, None].astype(x.dtype)
+    if cfg.n_shared:
+        sh = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        out = out + sh @ params["shared_down"]
+    return out

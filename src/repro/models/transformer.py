@@ -1,0 +1,308 @@
+"""Decoder-only transformer LM: GQA + RoPE + (optional) MoE FFN.
+
+Covers the five assigned LM architectures (StarCoder2-7B, Granite-20B,
+SmolLM-360M, Qwen2-MoE-A2.7B, Qwen3-MoE-235B).  Layers are *stacked* and
+iterated with ``lax.scan`` + configurable remat so the 94-layer configs
+lower to compact HLO; a KV-cache ``decode_step`` serves the decode shapes.
+
+Params are plain pytrees.  Sharding is applied by the launcher via
+``parallel.sharding.lm_param_specs`` (FSDP over the data axis × TP over the
+model axis) — the model code only places activation sharding constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (apply_rope, chunked_gqa_attention, cross_entropy,
+                     dense_init, gqa_attention, rmsnorm)
+from .moe import MoEConfig, init_moe_params, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                  # 0 → d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    tie_embeddings: bool = False
+    q_block: int = 1024              # row-blocked attention block size
+    moe_shard_map: bool = False      # §Perf H5: EP dispatch via shard_map
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOPs in the roofline)."""
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+        if self.moe:
+            ffn = (self.moe.n_experts * 3 * d * self.moe.d_expert
+                   + d * self.moe.n_experts
+                   + (3 * d * self.moe.d_expert * self.moe.n_shared))
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+        ffn = (self.moe.top_k + self.moe.n_shared) * 3 * d * self.moe.d_expert \
+            + d * self.moe.n_experts
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+def init_layer_params(key, cfg: LMConfig):
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, cfg.dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, cfg.dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, cfg.dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, cfg.dtype),
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "ln2": jnp.ones((d,), cfg.dtype),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe_params(ks[4], d, cfg.moe, cfg.dtype)
+    else:
+        p["w_gate"] = dense_init(ks[5], d, cfg.d_ff, cfg.dtype)
+        p["w_up"] = dense_init(ks[6], d, cfg.d_ff, cfg.dtype)
+        p["w_down"] = dense_init(ks[7], cfg.d_ff, d, cfg.dtype)
+    return p
+
+
+def init_lm_params(key, cfg: LMConfig):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    p = {
+        "embed": dense_init(k_emb, cfg.vocab, cfg.d_model, cfg.dtype, scale=0.02),
+        "layers": layers,            # stacked [L, ...] pytree for lax.scan
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_out, cfg.d_model, cfg.vocab, cfg.dtype)
+    return p
+
+
+def abstract_lm_params(cfg: LMConfig):
+    """ShapeDtypeStruct pytree — dry-run params without allocation."""
+    return jax.eval_shape(lambda: init_lm_params(jax.random.PRNGKey(0), cfg))
+
+
+def _layer_fwd(cfg: LMConfig, x, layer, positions, dp_axes=None, tp_axis=None,
+               mesh=None):
+    """One decoder block. x: [B, S, D]."""
+    B, S, D = x.shape
+    dh = cfg.head_dim
+    h = rmsnorm(x, layer["ln1"])
+    q = (h @ layer["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (h @ layer["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (h @ layer["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    attn = chunked_gqa_attention(q, k, v, q_block=cfg.q_block, causal=True)
+    x = x + attn.reshape(B, S, -1) @ layer["wo"]
+
+    h = rmsnorm(x, layer["ln2"])
+    if cfg.moe:
+        flat = h.reshape(B * S, D)
+        if cfg.moe_shard_map and mesh is not None and cfg.moe.use_ep:
+            from .moe import moe_ffn_ep
+
+            y, aux = moe_ffn_ep(layer["moe"], flat, cfg.moe, mesh,
+                                dp_axes, tp_axis)
+        else:
+            y, aux = moe_ffn(layer["moe"], flat, cfg.moe, ep_axis=tp_axis,
+                             dp_axes=dp_axes)
+        x = x + y.reshape(B, S, D)
+    else:
+        y = jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])
+        if tp_axis is not None:
+            from jax.sharding import PartitionSpec as P
+            from jax.lax import with_sharding_constraint as wsc
+
+            y = wsc(y, P(dp_axes, None, tp_axis))
+        x = x + y @ layer["w_down"]
+        aux = jnp.zeros((), jnp.float32)
+    return x, aux
+
+
+def _wsc_act(x, dp_axes, tp_axis=None):
+    """Pin activations to batch-sharded (+ optionally sequence-parallel)
+    layout — GSPMD drops the batch sharding after gathers from 2-D-sharded
+    tables otherwise, and the layer-scan carries must be sequence-sharded
+    over tp (Megatron-SP) or 52-layer × 6k-wide carries blow past HBM."""
+    if dp_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    from jax.lax import with_sharding_constraint as wsc
+
+    if tp_axis is not None and x.ndim >= 3:
+        return wsc(x, P(dp_axes, tp_axis, *([None] * (x.ndim - 2))))
+    return wsc(x, P(dp_axes, *([None] * (x.ndim - 1))))
+
+
+def lm_backbone(params, cfg: LMConfig, tokens, dp_axes=None, tp_axis=None,
+                mesh=None):
+    """tokens [B, S] → final hidden states [B, S, D] + aux loss."""
+    B, S = tokens.shape
+    x = _wsc_act(params["embed"][tokens], dp_axes)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, layer):
+        x, aux = carry
+        fwd = partial(_layer_fwd, cfg, dp_axes=dp_axes, tp_axis=tp_axis,
+                      mesh=mesh)
+        if cfg.remat:
+            fwd = jax.checkpoint(fwd, policy=jax.checkpoint_policies.nothing_saveable)
+        x, a = fwd(x, layer, positions)
+        x = _wsc_act(x, dp_axes, tp_axis)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return rmsnorm(x, params["ln_f"]), aux
+
+
+def lm_forward(params, cfg: LMConfig, tokens, dp_axes=None, tp_axis=None):
+    """tokens [B, S] → logits [B, S, V] + aux loss."""
+    x, aux = lm_backbone(params, cfg, tokens, dp_axes, tp_axis)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, aux
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, dp_axes=None, tp_axis=None,
+            mesh=None):
+    from .layers import chunked_cross_entropy
+
+    B, S = tokens.shape
+    x, aux = lm_backbone(params, cfg, tokens, dp_axes, tp_axis, mesh)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    loss = chunked_cross_entropy(
+        x.reshape(B * S, -1), head, labels.reshape(B * S)
+    )
+    return loss + aux
+
+
+def prefill_step(params, cfg: LMConfig, tokens, dp_axes=None, tp_axis=None):
+    """Prefill: tokens [B, S] → (last-position logits [B, V], KVCache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, layer):
+        dh = cfg.head_dim
+        h = rmsnorm(x, layer["ln1"])
+        q = (h @ layer["wq"]).reshape(B, S, cfg.n_heads, dh)
+        k = (h @ layer["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+        v = (h @ layer["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        attn = chunked_gqa_attention(q, k, v, q_block=cfg.q_block, causal=True)
+        x = x + attn.reshape(B, S, -1) @ layer["wo"]
+        h = rmsnorm(x, layer["ln2"])
+        if cfg.moe:
+            y, _ = moe_ffn(layer["moe"], h.reshape(B * S, -1), cfg.moe,
+                           ep_axis=tp_axis, dp_axes=dp_axes)
+            x = x + y.reshape(B, S, -1)
+        else:
+            y = jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])
+            x = x + y @ layer["w_down"]
+        return x, (k, v)
+
+    fwd = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(fwd, x, params["layers"])
+    x = rmsnorm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x[:, -1] @ head
+    cache = KVCache(k=ks, v=vs,
+                    length=jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # [L, B, T, Hkv, Dh]
+    v: jnp.ndarray       # [L, B, T, Hkv, Dh]
+    length: jnp.ndarray  # [B] filled prefix length
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, fill: int = 0):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.dtype),
+        v=jnp.zeros(shape, cfg.dtype),
+        length=jnp.full((batch,), fill, jnp.int32),
+    )
+
+
+def abstract_kv_cache(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_kv_cache(cfg, batch, max_len))
+
+
+def decode_step(params, cfg: LMConfig, cache: KVCache, tokens,
+                dp_axes=None, tp_axis=None):
+    """One token per sequence.  tokens [B] → logits [B, V], new cache."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]            # [B, 1, D]
+    pos = cache.length                                  # [B]
+
+    def body(x_aux, inp):
+        x, _ = x_aux
+        layer, kc, vc = inp
+        h = rmsnorm(x, layer["ln1"])
+        dh = cfg.head_dim
+        q = (h @ layer["wq"]).reshape(B, 1, cfg.n_heads, dh)
+        k = (h @ layer["wk"]).reshape(B, 1, cfg.n_kv_heads, dh)
+        v = (h @ layer["wv"]).reshape(B, 1, cfg.n_kv_heads, dh)
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        # insert into cache at position `length`
+        bidx = jnp.arange(B)
+        kc = kc.at[bidx, pos].set(k[:, 0])
+        vc = vc.at[bidx, pos].set(v[:, 0])
+        attn = gqa_attention(q, kc, vc, causal=False, kv_len=pos + 1)
+        x = x + attn.reshape(B, 1, -1) @ layer["wo"]
+        h = rmsnorm(x, layer["ln2"])
+        if cfg.moe:
+            y, _ = moe_ffn(layer["moe"], h.reshape(B, -1), cfg.moe,
+                           ep_axis=tp_axis, dp_axes=dp_axes)
+            x = x + y.reshape(B, 1, -1)
+        else:
+            y = jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])
+            x = x + y @ layer["w_down"]
+        return (x, None), (kc, vc)
+
+    (x, _), (new_k, new_v) = jax.lax.scan(
+        body, (x, None), (params["layers"], cache.k, cache.v)
+    )
+    x = rmsnorm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return logits, KVCache(k=new_k, v=new_v, length=cache.length + 1)

@@ -1,0 +1,17 @@
+"""LR schedules: linear warmup → cosine decay (the production default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(1, warmup)
+    t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def constant(step, lr: float):
+    return jnp.full_like(step, lr, dtype=jnp.float32)

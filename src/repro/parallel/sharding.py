@@ -1,0 +1,167 @@
+"""Per-architecture sharding rules: parameter/activation PartitionSpecs.
+
+Conventions on the production mesh (DESIGN.md §5):
+  dp axes  = ("pod", "data") multi-pod, ("data",) single-pod   — batch/FSDP
+  tp axis  = "model"                                            — TP/EP/rows
+
+LM params: FSDP shards the d_model (first) dim over dp, TP shards the
+ffn/head (second) dim over tp — the standard Megatron×ZeRO layout.  MoE
+expert tensors shard experts over tp (expert parallelism).  Embedding and
+lm_head shard the vocab dim over tp.  GNN/recsys/euler rules below.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in names if a != "model")
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(params: Any, mesh: Mesh, fsdp: bool = True) -> Any:
+    """PartitionSpec tree matching init_lm_params' structure."""
+    dp = dp_axes_of(mesh)
+    fs = dp if fsdp else None
+    tp_size = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") else \
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        if "embed" in path or "lm_head" in path:
+            # [V, D] / [D, V]: shard the big (vocab) dim over tp
+            big = 0 if leaf.shape[0] > leaf.shape[-1] else nd - 1
+            s = [None] * nd
+            s[big] = "model"
+            other = 1 - big if nd == 2 else None
+            if fsdp and other is not None:
+                s[other] = fs
+            return P(*s)
+        if "router" in path:
+            return P(fs, None)
+        if any(k in path for k in ("w_gate", "w_up")) and nd == 3:
+            # [E, D, F]: expert parallel when E divides tp, else TP on F
+            if leaf.shape[0] % tp_size == 0:
+                return P("model", fs, None)
+            return P(None, fs, "model")
+        if "w_down" in path and nd == 3:
+            if leaf.shape[0] % tp_size == 0:
+                return P("model", None, fs)   # [E, F, D]
+            return P(None, "model", fs)
+        if any(k in path for k in ("w_gate", "w_up", "wq", "wk", "wv",
+                                   "shared_gate", "shared_up")):
+            return P(fs, "model")             # [D, F]: TP cols
+        if any(k in path for k in ("w_down", "wo", "shared_down")):
+            return P("model", fs)             # [F, D]: TP rows
+        if nd == 1:
+            return P(None)                    # norms replicated
+        return P(*([None] * nd))
+
+    def walk(tree, prefix=""):
+        leaves, tdef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in leaves:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            # layer-stacked params have a leading L dim: shift specs right
+            sp = spec_for(key, leaf)
+            if key.startswith("layers/"):
+                inner_ndim = leaf.ndim - 1
+                sp = spec_for(key, jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype))
+                sp = P(None, *tuple(sp))
+            out.append(sp)
+        return jax.tree_util.tree_unflatten(tdef, out)
+
+    return walk(params)
+
+
+def lm_param_shardings(params, mesh, fsdp=True):
+    return jax.tree.map(lambda s: _named(mesh, s), lm_param_specs(params, mesh, fsdp),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(dp_axes_of(mesh), None)
+
+
+def kv_cache_specs(mesh: Mesh) -> Any:
+    """KVCache [L, B, T, H, D]: batch over dp, heads over tp."""
+    from ..models.transformer import KVCache
+
+    dp = dp_axes_of(mesh)
+    return KVCache(
+        k=P(None, dp, None, "model", None),
+        v=P(None, dp, None, "model", None),
+        length=P(dp),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys / euler
+# ---------------------------------------------------------------------------
+
+def gnn_batch_spec(mesh: Mesh, replicate_feats: bool = True):
+    """Edges shard over dp; node features replicate by default.
+
+    §Perf (pna H-P1): with dp-sharded node features, every x[src] gather
+    from dp-sharded edge indices forces GSPMD into per-layer feature
+    all-gathers in the scatter/gather neighborhood; replicating the node
+    table (≤1 GB for the assigned shapes) makes gathers local and turns
+    the dst-aggregation into one structured all-reduce per layer.  Pass
+    ``replicate_feats=False`` for the sharded baseline.
+    """
+    from ..models.gnn import GraphBatch
+
+    dp = dp_axes_of(mesh)
+    nspec = P(None, None) if replicate_feats else P(dp, None)
+    n1 = P(None) if replicate_feats else P(dp)
+    return GraphBatch(
+        node_feat=nspec,
+        edge_src=P(dp),
+        edge_dst=P(dp),
+        edge_mask=P(dp),
+        node_mask=n1,
+        labels=n1,
+    )
+
+
+def gnn_param_specs(params, mesh):
+    return jax.tree.map(lambda p: P(*([None] * p.ndim)), params)
+
+
+def recsys_param_specs(params, mesh):
+    def one(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if "table" in key:
+            return P("model", None)           # rows over tp
+        return P(*([None] * leaf.ndim))
+
+    leaves, tdef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(tdef, [one(p, l) for p, l in leaves])
+
+
+def recsys_batch_spec(mesh):
+    from ..models.recsys import RecsysBatch
+
+    dp = dp_axes_of(mesh)
+    return RecsysBatch(ids=P(dp, None, None), bag_mask=P(dp, None, None),
+                       labels=P(dp))
+
+
+def euler_state_specs(mesh, axes):
+    """Every Euler engine table shards its leading (partition) axis over
+    *all* mesh axes — one partition per device."""
+    from ..core.engine import EngineState
+
+    return EngineState(*([P(axes, None)] * len(EngineState._fields)))

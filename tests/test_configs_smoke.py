@@ -1,0 +1,174 @@
+"""Per-architecture smoke tests: reduced config, one real step on CPU,
+shape + finiteness assertions.  The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeCell
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch.steps import build_cell
+from repro.optim.adamw import init_adamw
+
+LM_ARCHS = ["starcoder2-7b", "granite-20b", "smollm-360m",
+            "qwen2-moe-a2.7b", "qwen3-moe-235b-a22b"]
+GNN_ARCHS = ["gcn-cora", "gat-cora", "pna"]
+
+
+def tiny_lm_shape():
+    return ShapeCell("train_4k", "train", batch=2, seq_len=32)
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_train(arch_id):
+    arch = get_config(arch_id, reduced=True)
+    arch = dataclasses.replace(arch, shapes={"train_4k": tiny_lm_shape()})
+    cell = build_cell(arch, "train_4k", None)
+    from repro.models.transformer import init_lm_params
+
+    params = init_lm_params(jax.random.PRNGKey(0), arch.model)
+    opt = init_adamw(params)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, arch.model.vocab, (2, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, arch.model.vocab, (2, 32)),
+                              jnp.int32),
+    }
+    p2, o2, loss = jax.jit(cell.fn)(params, opt, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    assert int(o2.step) == 1
+    # a second step must reduce nothing to NaN
+    _, _, loss2 = jax.jit(cell.fn)(p2, o2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS[:2])
+def test_lm_smoke_decode(arch_id):
+    arch = get_config(arch_id, reduced=True)
+    cfg = arch.model
+    from repro.models.transformer import (decode_step, init_kv_cache,
+                                          init_lm_params)
+
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    cache = init_kv_cache(cfg, 2, 64)
+    toks = jnp.zeros((2,), jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, c, t: decode_step(p, cfg, c, t)
+    )(params, cache, toks)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert (np.asarray(cache.length) == 1).all()
+
+
+@pytest.mark.parametrize("arch_id", GNN_ARCHS)
+@pytest.mark.parametrize("shape", ["full_graph_sm", "molecule"])
+def test_gnn_smoke(arch_id, shape):
+    arch = get_config(arch_id, reduced=True)
+    # shrink the shape cells
+    shapes = {
+        "full_graph_sm": ShapeCell("full_graph_sm", "graph_train",
+                                   n_nodes=64, n_edges=256, d_feat=64,
+                                   n_classes=7),
+        "molecule": ShapeCell("molecule", "graph_train", n_nodes=8,
+                              n_edges=16, batch=4, d_feat=64, n_classes=4),
+    }
+    arch = dataclasses.replace(arch, shapes=shapes)
+    cell = build_cell(arch, shape, None)
+    params_abs, opt_abs, g_abs = cell.abstract_inputs
+    rng = np.random.default_rng(1)
+
+    from repro.launch.steps import _graph_abstract  # noqa: PLC2701
+    from repro.models import gnn as gnn_mod
+
+    cfg = dataclasses.replace(arch.model, d_in=64,
+                              n_classes=max(shapes[shape].n_classes, 2))
+    params = gnn_mod.INITS[cfg.kind](jax.random.PRNGKey(0), cfg)
+    opt = init_adamw(params)
+    n, e = g_abs.node_feat.shape[0], g_abs.edge_src.shape[0]
+    g = gnn_mod.GraphBatch(
+        node_feat=jnp.asarray(rng.normal(size=(n, 64)), jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_mask=jnp.ones((e,), bool),
+        node_mask=jnp.ones((n,), bool),
+        labels=jnp.asarray(rng.integers(0, shapes[shape].n_classes, n),
+                           jnp.int32),
+    )
+    p2, o2, loss = jax.jit(cell.fn)(params, opt, g)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_nequip_smoke():
+    arch = get_config("nequip", reduced=True)
+    shapes = {"molecule": ShapeCell("molecule", "graph_train", n_nodes=8,
+                                    n_edges=16, batch=4, d_feat=16,
+                                    n_classes=4)}
+    arch = dataclasses.replace(arch, shapes=shapes)
+    cell = build_cell(arch, "molecule", None)
+    from repro.models.equivariant import AtomsBatch, init_nequip_params
+
+    params = init_nequip_params(jax.random.PRNGKey(0), arch.model)
+    opt = init_adamw(params)
+    b_abs = cell.abstract_inputs[2]
+    n, e = b_abs.species.shape[0], b_abs.edge_src.shape[0]
+    rng = np.random.default_rng(2)
+    batch = AtomsBatch(
+        species=jnp.asarray(rng.integers(0, 4, n), jnp.int32),
+        pos=jnp.asarray(rng.normal(size=(n, 3)) * 2, jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_mask=jnp.ones((e,), bool),
+        node_mask=jnp.ones((n,), bool),
+        graph_id=jnp.asarray(np.minimum(np.arange(n) // 2, 3), jnp.int32),
+    )
+    targets = jnp.zeros(cell.abstract_inputs[3].shape, jnp.float32)
+    p2, o2, loss = jax.jit(cell.fn)(params, opt, batch, targets)
+    assert np.isfinite(float(loss))
+
+
+def test_autoint_smoke():
+    arch = get_config("autoint", reduced=True)
+    shapes = {"train_batch": ShapeCell("train_batch", "train", batch=16)}
+    arch = dataclasses.replace(arch, shapes=shapes)
+    cell = build_cell(arch, "train_batch", None)
+    from repro.data.recsys import SyntheticCTR
+    from repro.models.recsys import init_autoint_params
+
+    params = init_autoint_params(jax.random.PRNGKey(0), arch.model)
+    opt = init_adamw(params)
+    batch = SyntheticCTR(arch.model, 16).batch_at(0)
+    batch = jax.tree.map(jnp.asarray, batch)
+    p2, o2, loss = jax.jit(cell.fn)(params, opt, batch)
+    assert np.isfinite(float(loss)) and 0 < float(loss) < 10
+
+
+def test_euler_smoke():
+    """Reduced Euler config: distributed engine on the 1-device mesh."""
+    from repro.core.engine import DistributedEngine
+    from repro.core.graph import partition_graph
+    from repro.core.phase2 import generate_merge_tree
+    from repro.graphgen.eulerize import eulerian_rmat
+    from repro.graphgen.partition import partition_vertices
+
+    g = eulerian_rmat(6, avg_degree=4, seed=0)
+    pg = partition_graph(g, np.zeros(g.num_vertices, dtype=np.int64))
+    mesh = jax.make_mesh((1,), ("part",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    caps = DistributedEngine.size_caps(pg)
+    eng = DistributedEngine(mesh, ("part",), caps, n_levels=1)
+    circuit, metrics = eng.run(pg, validate=True)
+    assert len(circuit) == g.num_edges
+
+
+def test_all_registered_configs_load():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.shapes, a
+        red = get_config(a, reduced=True)
+        assert red.model is not None

@@ -1,0 +1,90 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.graph import Graph, partition_graph
+from repro.core.hierholzer import hierholzer_circuit, validate_circuit
+from repro.core.host_engine import HostEngine
+from repro.core.phase2 import generate_merge_tree, ancestor_at_level
+from repro.graphgen.eulerize import eulerize, largest_component
+from repro.graphgen.partition import partition_vertices
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(8, 48))
+    m = draw(st.integers(n, 4 * n))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    keep = u != v
+    return Graph(n, u[keep].astype(np.int64), v[keep].astype(np.int64))
+
+
+@given(random_graphs())
+@settings(max_examples=25, deadline=None)
+def test_eulerize_always_even(g):
+    ge = eulerize(largest_component(g), seed=0)
+    assert ge.is_eulerian()
+
+
+@given(random_graphs(), st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_host_engine_always_valid(g, nparts):
+    g = eulerize(largest_component(g), seed=0)
+    if g.num_edges < 4:
+        return
+    nparts = min(nparts, max(2, g.num_vertices // 4))
+    pg = partition_graph(g, partition_vertices(g, nparts, seed=0))
+    res = HostEngine(pg).run(validate=True)   # validate_circuit inside
+    # every edge appears exactly once
+    assert sorted(np.asarray(res.circuit) >> 1) == list(range(g.num_edges))
+
+
+@given(random_graphs())
+@settings(max_examples=25, deadline=None)
+def test_circuit_closed_walk(g):
+    g = eulerize(largest_component(g), seed=1)
+    if g.num_edges == 0:
+        return
+    c = hierholzer_circuit(g)
+    validate_circuit(g, c)
+
+
+@given(st.integers(2, 24), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_merge_tree_reaches_single_root(nparts, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 20, (nparts, nparts))
+    w = np.triu(w, 1)
+    w = w + w.T
+    from repro.core.graph import MetaGraph
+
+    tree = generate_merge_tree(MetaGraph(nparts, w.astype(np.int64)))
+    # every partition ends at the single root
+    roots = {ancestor_at_level(tree, p, tree.height - 1)
+             for p in range(nparts)}
+    assert len(roots) == 1
+    import math
+
+    assert tree.height >= math.ceil(math.log2(nparts))
+
+
+@given(st.integers(1, 6), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_memory_accounting_monotone_parts(levels, seed):
+    """Cumulative Int64 state never counts negative components."""
+    g = eulerize(largest_component(
+        Graph(24, *(np.random.default_rng(seed).integers(0, 24, (2, 80))))
+    ), seed=0)
+    if g.num_edges < 8:
+        return
+    pg = partition_graph(g, partition_vertices(g, 3, seed=0))
+    res = HostEngine(pg).run(validate=True)
+    for ls in res.levels:
+        assert ls.cumulative >= 0
+        for s in ls.states:
+            assert min(s.remote_copies, s.boundary, s.open_stubs,
+                       s.touch, s.components) >= 0
