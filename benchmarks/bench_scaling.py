@@ -1,11 +1,19 @@
-"""E1/E6 — paper Fig. 5 + superstep comparison.
+"""E1/E6 — paper Fig. 5 + superstep comparison, plus fused-vs-eager.
 
 Weak-ish scaling series (graph size ∝ partitions, scaled down from the
 paper's G20/P2…G50/P8 to CPU-feasible sizes), reporting total engine time,
 user (Phase-1) compute time, supersteps, and the Makki-baseline
 coordination costs the paper argues against (§2.2).
+
+The device series runs the distributed engine both ways on the same graph
+and mesh: the scan-fused whole-run program (one compile, one host sync)
+vs the eager per-level loop (one program call + one log sync per level).
+Wall-clock excludes compile (each path is warmed once first).
 """
 from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import time
 
@@ -19,6 +27,10 @@ from repro.graphgen.partition import partition_vertices
 
 SERIES = [  # (scale, parts) — mirrors G20/P2, G30/P3, G40/P4, G40/P8
     (12, 2), (13, 3), (14, 4), (14, 8),
+]
+
+DEVICE_SERIES = [  # (scale, parts) — ≥2 graph scales, fused vs eager
+    (9, 8), (11, 8),
 ]
 
 
@@ -48,13 +60,60 @@ def run(series=SERIES, seed=0):
     return rows
 
 
-def main():
-    rows = run()
+def run_device(series=DEVICE_SERIES, seed=0, repeats=3):
+    """Fused vs eager wall-clock on the simulated device mesh."""
+    import jax
+
+    from repro.core.engine import DistributedEngine
+    from repro.core.phase2 import generate_merge_tree
+    from repro.launch.mesh import make_part_mesh
+
+    rows = []
+    for scale, parts in series:
+        g = eulerian_rmat(scale, avg_degree=5, seed=seed + scale)
+        pg = partition_graph(g, partition_vertices(g, parts, seed=seed))
+        mesh = make_part_mesh(parts)
+        tree = generate_merge_tree(pg.meta)
+        eng = DistributedEngine(mesh, ("part",),
+                                DistributedEngine.size_caps(pg),
+                                n_levels=tree.height + 1)
+
+        def timed(fused):
+            eng.run(pg, validate=False, fused=fused)       # warm/compile
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                eng.run(pg, validate=False, fused=fused)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        t_fused = timed(True)
+        t_eager = timed(False)
+        rows.append({
+            "graph": f"s{scale}/P{parts}",
+            "V": g.num_vertices, "E": g.num_edges,
+            "levels": tree.height + 1,
+            "fused_s": round(t_fused, 3),
+            "eager_s": round(t_eager, 3),
+            "speedup": round(t_eager / t_fused, 2),
+        })
+    return rows
+
+
+def _print_table(rows):
     cols = list(rows[0].keys())
     print(" | ".join(f"{c:>12s}" for c in cols))
     for r in rows:
         print(" | ".join(f"{str(r[c]):>12s}" for c in cols))
-    return rows
+
+
+def main():
+    rows = run()
+    _print_table(rows)
+    print("\nfused vs eager (distributed engine, simulated 8-device mesh):")
+    dev_rows = run_device()
+    _print_table(dev_rows)
+    return rows + dev_rows
 
 
 if __name__ == "__main__":

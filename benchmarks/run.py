@@ -34,6 +34,7 @@ def main():
 
     suites = {
         "scaling": lambda: bench_scaling.run(series=scaling_series),
+        "fused": lambda: bench_scaling.run_device(),
         "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
                                            parts=kw["parts"]),
         "phase1": lambda: bench_phase1.run(**kw),
@@ -62,6 +63,11 @@ def _summarize(name, res):
                   f"user={r['user_s']}s supersteps={r['supersteps']} "
                   f"(makki: {r['makki_partition_supersteps']} partition / "
                   f"{r['makki_vertex_supersteps']} vertex supersteps)")
+    elif name == "fused":
+        for r in res:
+            print(f"  {r['graph']:>10s}: fused={r['fused_s']}s "
+                  f"eager={r['eager_s']}s over {r['levels']} levels "
+                  f"→ {r['speedup']}x")
     elif name == "phase1":
         print(f"  fit over {res['points']} points: R2={res['r2']}")
     elif name == "memory":

@@ -49,7 +49,7 @@ def lm_shapes(full_attention: bool) -> Dict[str, ShapeCell]:
         "long_500k": ShapeCell(
             "long_500k", "decode", batch=1, seq_len=524288,
             skip=("full-attention arch: 500k decode requires sub-quadratic "
-                  "attention (DESIGN.md §4)") if full_attention else None,
+                  "attention (DESIGN.md §6)") if full_attention else None,
         ),
     }
 

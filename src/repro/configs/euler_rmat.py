@@ -16,6 +16,11 @@ class EulerConfig:
     name: str
     caps: EngineCaps
     n_levels: int
+    # edge count modeled by the "fused" whole-run cell (0 → n·edge_cap).
+    # The mate/Phase-3 stage is O(E) and partition-independent, so a
+    # reduced E keeps AOT compiles tractable while the "superstep" cell
+    # models the full per-level load.
+    fused_edges: int = 0
 
 
 def _model(reduced=False):
@@ -25,6 +30,7 @@ def _model(reduced=False):
             EngineCaps(edge_cap=64, park_cap=64, ship_cap=32, new_cap=96,
                        open_cap=48, touch_cap=96),
             n_levels=4,
+            fused_edges=4_096,
         )
     return EulerConfig(
         "euler-rmat-512",
@@ -48,14 +54,22 @@ def _model(reduced=False):
             # runtime overflow flags guard them.
             open_ship_cap=2_048,
             touch_ship_cap=4_096,
+            # fused path: mate writes are keyed by stub id, so they spread
+            # ~uniformly over shards; lane = 64k covers 8x hot-spotting at
+            # the 2·pair_cap worst case (runtime overflow flags guard it)
+            mate_ship_cap=65_536,
         ),
         n_levels=10,               # ceil(log2 512) + 1
+        fused_edges=4_194_304,     # Phase-3 analysis scale (O(E), see above)
     )
 
 
 SHAPES = {
     "superstep": ShapeCell("superstep", "superstep",
                            note="one BSP level: ship + Phase 1"),
+    "fused": ShapeCell("fused", "superstep",
+                       note="scan-fused whole run: all levels + on-device "
+                            "mate accumulation + device Phase 3"),
 }
 
 

@@ -2,7 +2,7 @@
 
 E(3)-equivariant interatomic potential.  Non-molecular shape cells
 (full_graph_sm etc.) treat the graph as a point cloud with synthetic 3-D
-coordinates — same compute regime, documented in DESIGN.md §4.
+coordinates — same compute regime, documented in DESIGN.md §6.
 """
 import jax.numpy as jnp
 from ..models.equivariant import NequIPConfig

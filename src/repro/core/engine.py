@@ -5,7 +5,7 @@ The paper's Phase-2 execution maps 1:1 onto a TPU pod:
 
   · each mesh device hosts one partition (512 partitions on the 2×16×16
     production mesh, flattened over ("pod","data","model"));
-  · one *superstep* = one jitted shard_map program: ship pathMap entries
+  · one *superstep* = one shard_map program body: ship pathMap entries
     (activated remote edges, open path endpoints, boundary touch pairs) via
     a single fused ``all_to_all``, then run the vectorized Phase 1 locally;
   · the merge tree is host-side static data (paper builds it offline too),
@@ -18,21 +18,34 @@ The paper's Phase-2 execution maps 1:1 onto a TPU pod:
     default ON in the distributed engine; the host engine measures the
     paper's baseline without them.
 
-Mate logs (the pairing decisions) are emitted per level — the "persist to
-disk" of the paper — and Phase 3 replays them into the final circuit.
+Execution modes (DESIGN.md §4):
+
+  **fused** (default) — the whole run is ONE compiled device program plus
+  one host sync: a ``jax.lax.scan`` over levels inside a single shard_map
+  drives every superstep, each level's mate log is scattered on-device
+  into a stub-sharded ``mate[2E]`` accumulator (later-level writes win,
+  matching the paper's disk-replay order), and Phase 3 (pivot splice +
+  list-rank emission) finishes on-device via ``phase3_device``.  Logs
+  never leave the devices; the circuit/flags/metrics are fetched once.
+
+  **eager** (``fused=False``) — the original per-level Python loop, one
+  jitted superstep per level with the mate logs synced to host and
+  replayed there.  It is the debugging/metrics oracle: byte-identical
+  circuits to the fused path (both finish with the same ``phase3_device``
+  program), with per-level host visibility.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
-from typing import List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..parallel.compat import shard_map
 from .graph import PartitionedGraph
 from .phase1 import (
     BIG,
@@ -40,11 +53,12 @@ from .phase1 import (
     NewEdges,
     OpenTable,
     Phase1Caps,
-    Phase1Out,
     TouchTable,
+    pair_table_cap,
     phase1_local,
 )
-from .phase2 import MergeTree, ancestor_at_level, generate_merge_tree, merge_level_of
+from .phase2 import MergeTree, generate_merge_tree
+from .phase3 import phase3_device
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,8 +73,11 @@ class EngineCaps:
     touch_cap: int
     open_ship_cap: int = 0    # per (src,dst) lane for opens (0 → open_cap)
     touch_ship_cap: int = 0   # per (src,dst) lane for touch (0 → touch_cap)
+    mate_ship_cap: int = 0    # per (src,dst) lane for mate writes on the
+                              # fused path (0 → 2·pair-table width, safe)
     hook_rounds: int = 0
     splice_rounds: int = 12
+    phase3_rounds: int = 64   # pivot-splice round budget of device Phase 3
     static_splice: bool = False
 
     def phase1(self) -> Phase1Caps:
@@ -71,6 +88,11 @@ class EngineCaps:
             splice_rounds=self.splice_rounds,
             static_splice=self.static_splice,
         )
+
+    def pair_cap(self) -> int:
+        """Width of Phase 1's compacted pair table (its mate-log width)."""
+        return pair_table_cap(2 * self.new_cap + self.open_cap,
+                              self.touch_cap)
 
 
 class EngineState(NamedTuple):
@@ -118,6 +140,32 @@ class StepOut(NamedTuple):
     metrics: jnp.ndarray   # [n, 4] longs: remote, opens, touch, comps
 
 
+class FusedOut(NamedTuple):
+    """Everything the fused program returns — fetched in ONE host sync."""
+
+    circuit: jnp.ndarray   # [E] arrival stubs in walk order (replicated)
+    mate: jnp.ndarray      # [2E] post-splice mate permutation (replicated)
+    flags: jnp.ndarray     # [n, L, 4]
+    metrics: jnp.ndarray   # [n, L, 4]
+    phase3_ok: jnp.ndarray  # [] bool: pivot splice converged
+
+
+def build_anc_table(tree: MergeTree, n: int) -> np.ndarray:
+    """``anc[level, part0] → active partition after that level's merges``
+    for every level at once (vectorized ``ancestor_at_level``)."""
+    anc = np.empty((max(1, tree.height), n), dtype=np.int32)
+    cur = np.arange(n)
+    for lv in tree.levels:
+        pmap = np.arange(n)
+        for child, parent in lv.pairs:
+            pmap[child] = parent
+        cur = pmap[cur]
+        anc[lv.level] = cur
+    if tree.height == 0:
+        anc[0] = cur
+    return anc
+
+
 def _route(dest: jnp.ndarray, mask: jnp.ndarray, fields, n: int, lane: int):
     """Scatter entries into an [n, lane] send buffer keyed by dest device.
     Returns (buffers..., buf_mask, overflow)."""
@@ -152,7 +200,7 @@ def _compact_rows(fields, mask, cap: int):
 
 class DistributedEngine:
     """Drives supersteps over a device mesh; also exposes the compiled
-    superstep for the dry-run/roofline harness."""
+    superstep (eager) and the fully fused run program."""
 
     def __init__(
         self,
@@ -171,102 +219,112 @@ class DistributedEngine:
         self.remote_dedup = remote_dedup
         self.deferred_transfer = deferred_transfer
         self._step = None
+        self._fused: Dict[int, object] = {}    # E → compiled fused program
+        self._p3 = None                        # eager-path Phase 3 program
 
     # ------------------------------------------------------------------
     # loading
     # ------------------------------------------------------------------
     @staticmethod
-    def plan(pg: PartitionedGraph) -> Tuple[MergeTree, np.ndarray, np.ndarray, np.ndarray]:
+    def plan(pg: PartitionedGraph) -> Tuple[
+        MergeTree, np.ndarray, np.ndarray, np.ndarray, np.ndarray
+    ]:
         """Merge tree + per-edge activation schedule + per-vertex last
-        activation level.  Host-side, O(E) + O(n² log n)."""
+        activation level + the full ancestor table.  Host-side and fully
+        vectorized: O(E + n·height) NumPy, no per-edge Python."""
         tree = generate_merge_tree(pg.meta)
+        n = pg.num_parts
+        anc = build_anc_table(tree, n)
         E = pg.graph.num_edges
         act = np.full(E, -1, dtype=np.int64)
         is_cut = pg.edge_part_u != pg.edge_part_v
-        cache = {}
-        cu = pg.edge_part_u[is_cut]
-        cv = pg.edge_part_v[is_cut]
-        acts = np.empty(len(cu), dtype=np.int64)
-        for k, (a, b) in enumerate(zip(cu, cv)):
-            key = (min(a, b), max(a, b))
-            if key not in cache:
-                cache[key] = merge_level_of(tree, int(a), int(b))
-            acts[k] = cache[key]
-        act[is_cut] = acts
+        cut_ids = np.nonzero(is_cut)[0]
+        if len(cut_ids):
+            cu = pg.edge_part_u[cut_ids].astype(np.int64)
+            cv = pg.edge_part_v[cut_ids].astype(np.int64)
+            # merge_level_of, batched: first level where ancestors agree
+            eq = anc[:, cu] == anc[:, cv]          # [height', K]
+            hit = eq.any(axis=0)
+            act[cut_ids] = np.where(hit, np.argmax(eq, axis=0),
+                                    tree.height - 1)
         # last activation level per vertex (for touch-retention)
         V = pg.graph.num_vertices
         la = np.zeros(V, dtype=np.int64)
-        cut_ids = np.nonzero(is_cut)[0]
         np.maximum.at(la, pg.graph.edge_u[cut_ids], act[cut_ids] + 1)
         np.maximum.at(la, pg.graph.edge_v[cut_ids], act[cut_ids] + 1)
-        return tree, act, la, cut_ids
+        return tree, act, la, cut_ids, anc
+
+    @staticmethod
+    def _keepers(pg: PartitionedGraph, cu: np.ndarray,
+                 cv: np.ndarray) -> np.ndarray:
+        """§5a, batched: the lighter partition keeps (parks) each cut edge
+        (ties to the smaller pid)."""
+        loads = np.array([len(p.remote_eids) for p in pg.parts],
+                         dtype=np.int64)
+        keep_u = (loads[cu] < loads[cv]) | (
+            (loads[cu] == loads[cv]) & (cu <= cv)
+        )
+        return np.where(keep_u, cu, cv)
 
     @classmethod
     def size_caps(cls, pg: PartitionedGraph, slack: float = 1.3,
                   open_cap: Optional[int] = None,
                   touch_cap: Optional[int] = None) -> "EngineCaps":
-        """Exact capacity sizing from the activation schedule."""
-        tree, act, la, cut_ids = cls.plan(pg)
+        """Exact capacity sizing from the activation schedule (segment ops,
+        no per-edge Python loops)."""
+        tree, act, la, cut_ids, anc = cls.plan(pg)
         n = pg.num_parts
         edge_cap = max(len(p.local_eids) for p in pg.parts)
-        park = np.zeros(n, dtype=np.int64)
-        for e in cut_ids:
-            a, b = int(pg.edge_part_u[e]), int(pg.edge_part_v[e])
-            keeper = cls._keeper(pg, a, b)
-            park[keeper] += 1
-        new_per = {}
-        ship_per = {}
-        for e in cut_ids:
-            lvl = int(act[e])
-            a = int(pg.edge_part_u[e])
-            b = int(pg.edge_part_v[e])
-            keeper = cls._keeper(pg, a, b)
-            dest = ancestor_at_level(tree, a, lvl)
-            new_per[(dest, lvl)] = new_per.get((dest, lvl), 0) + 1
-            ship_per[(keeper, dest, lvl)] = ship_per.get((keeper, dest, lvl), 0) + 1
-        new_cap = max(new_per.values(), default=1)
-        ship_cap = max(ship_per.values(), default=1)
+        if len(cut_ids):
+            cu = pg.edge_part_u[cut_ids].astype(np.int64)
+            cv = pg.edge_part_v[cut_ids].astype(np.int64)
+            keeper = cls._keepers(pg, cu, cv)
+            park_max = int(np.bincount(keeper, minlength=n).max())
+            lvl = act[cut_ids]
+            dest = anc[lvl, cu].astype(np.int64)
+            hh = max(1, tree.height)
+            new_cap_v = int(np.bincount(dest * hh + lvl).max())
+            _, ship_cnt = np.unique((keeper * n + dest) * hh + lvl,
+                                    return_counts=True)
+            ship_cap_v = int(ship_cnt.max())
+        else:
+            park_max, new_cap_v, ship_cap_v = 0, 1, 1
         # opens bounded by odd-degree vertex counts; touch by boundary counts
         deg = pg.graph.degrees()
+        V = pg.graph.num_vertices
         ob = 0
         bmax = 0
         for lvl in range(tree.height + 1):
-            future = np.zeros(pg.graph.num_vertices, dtype=np.int64)
             live = cut_ids[act[cut_ids] >= lvl]
+            future = np.zeros(V, dtype=np.int64)
             np.add.at(future, pg.graph.edge_u[live], 1)
             np.add.at(future, pg.graph.edge_v[live], 1)
             odd = (deg - future) % 2 == 1
-            anc = np.array([ancestor_at_level(tree, p, lvl - 1) for p in range(n)])
-            owner = anc[pg.part_of_vertex]
-            for p in np.unique(owner):
-                sel = owner == p
-                ob = max(ob, int(odd[sel].sum()))
-                bmax = max(bmax, int((future[sel] > 0).sum()))
+            anc_row = anc[lvl - 1] if lvl > 0 else np.arange(n)
+            owner = anc_row[pg.part_of_vertex]
+            if odd.any():
+                ob = max(ob, int(np.bincount(owner[odd]).max()))
+            busy = future > 0
+            if busy.any():
+                bmax = max(bmax, int(np.bincount(owner[busy]).max()))
         oc = open_cap or max(16, int(2 * ob * slack))
         tc = touch_cap or max(16, int(bmax * 4 * slack))
         return EngineCaps(
             edge_cap=int(edge_cap * slack),
-            park_cap=max(8, int(park.max() * slack)),
-            ship_cap=max(8, int(ship_cap * slack)),
+            park_cap=max(8, int(park_max * slack)),
+            ship_cap=max(8, int(ship_cap_v * slack)),
             # the level-0 pool holds the initial local edges too
-            new_cap=max(8, int(new_cap * slack), int(edge_cap * slack)),
+            new_cap=max(8, int(new_cap_v * slack), int(edge_cap * slack)),
             open_cap=oc,
             touch_cap=tc,
             open_ship_cap=oc,
             touch_ship_cap=tc,
         )
 
-    @staticmethod
-    def _keeper(pg: PartitionedGraph, a: int, b: int) -> int:
-        """§5a: the lighter partition keeps (parks) the cut edge."""
-        la_ = len(pg.parts[a].remote_eids)
-        lb_ = len(pg.parts[b].remote_eids)
-        return a if (la_, a) <= (lb_, b) else b
-
     def load(self, pg: PartitionedGraph) -> Tuple[EngineState, np.ndarray]:
         """Build the initial sharded state.  Returns (state, anc_table)."""
         assert pg.num_parts == self.n, (pg.num_parts, self.n)
-        tree, act, la, cut_ids = self.plan(pg)
+        tree, act, la, cut_ids, anc_table = self.plan(pg)
         self.tree = tree
         n, c = self.n, self.caps
         g = pg.graph
@@ -291,26 +349,25 @@ class DistributedEngine:
             le["lav"][p.pid, :k] = la[g.edge_v[eids]]
             le_mask[p.pid, :k] = True
 
-        fills = np.zeros(n, dtype=np.int64)
-        for e in cut_ids:
-            a, b = int(pg.edge_part_u[e]), int(pg.edge_part_v[e])
-            keeper = self._keeper(pg, a, b)
-            i = fills[keeper]
-            assert i < c.park_cap, "park_cap overflow at load"
-            pk["eid"][keeper, i] = e
-            pk["u"][keeper, i] = g.edge_u[e]
-            pk["v"][keeper, i] = g.edge_v[e]
-            pk["lau"][keeper, i] = la[g.edge_u[e]]
-            pk["lav"][keeper, i] = la[g.edge_v[e]]
-            pk["act"][keeper, i] = act[e]
-            pk["own0"][keeper, i] = a
-            pk_mask[keeper, i] = True
-            fills[keeper] += 1
-
-        anc_table = np.zeros((max(1, tree.height), n), dtype=np.int32)
-        for lvl in range(max(1, tree.height)):
-            for p in range(n):
-                anc_table[lvl, p] = ancestor_at_level(tree, p, lvl)
+        if len(cut_ids):
+            cu = pg.edge_part_u[cut_ids].astype(np.int64)
+            cv = pg.edge_part_v[cut_ids].astype(np.int64)
+            keeper = self._keepers(pg, cu, cv)
+            order = np.argsort(keeper, kind="stable")
+            ks, es = keeper[order], cut_ids[order]
+            idx = np.arange(len(ks))
+            seg0 = np.where(np.r_[True, ks[1:] != ks[:-1]], idx, 0)
+            pos = idx - np.maximum.accumulate(seg0)
+            assert int(pos.max(initial=0)) < c.park_cap, \
+                "park_cap overflow at load"
+            pk["eid"][ks, pos] = es
+            pk["u"][ks, pos] = g.edge_u[es]
+            pk["v"][ks, pos] = g.edge_v[es]
+            pk["lau"][ks, pos] = la[g.edge_u[es]]
+            pk["lav"][ks, pos] = la[g.edge_v[es]]
+            pk["act"][ks, pos] = act[es]
+            pk["own0"][ks, pos] = pg.edge_part_u[es]
+            pk_mask[ks, pos] = True
 
         oc, tc = c.open_cap, c.touch_cap
         z_o = np.full((n, oc), BIG, dtype=np.int32)
@@ -334,8 +391,10 @@ class DistributedEngine:
     # ------------------------------------------------------------------
     # the superstep program
     # ------------------------------------------------------------------
-    def make_superstep(self):
-        """One jitted shard_map program serving every level."""
+    def _make_superstep_core(self):
+        """The per-device superstep body (unsharded view): ship + Phase 1
+        + table refresh.  Shared verbatim by the eager per-level program
+        and the fused level scan, so both execute identical supersteps."""
         n, c = self.n, self.caps
         axes = self.axes
         osc = c.open_ship_cap or c.open_cap
@@ -343,11 +402,10 @@ class DistributedEngine:
         p1caps = c.phase1()
         deferred = self.deferred_transfer
 
-        def device_fn(level, anc, state: EngineState) -> StepOut:
-            state = jax.tree.map(lambda x: x[0], state)  # [1,·] → [·]
+        def core(lvl, anc, state: EngineState):
             me = jax.lax.axis_index(axes).astype(I32)
-            lvl = level.astype(I32)
-            dest_row = anc[jnp.maximum(lvl - 1, 0)]      # [n] part0 → active pid
+            lvl = lvl.astype(I32)
+            dest_row = anc[jnp.maximum(lvl - 1, 0)]  # [n] part0 → active pid
 
             # ---- 1. ship activated parked edges ----
             if deferred:
@@ -487,37 +545,179 @@ class DistributedEngine:
                  4 * jnp.sum(out.touch.mask).astype(I32),
                  4 * out.n_components]
             )
+            return nstate, out.log_s1, out.log_s2, out.log_mask, flags, metrics
+
+        return core
+
+    def _state_specs(self):
+        return EngineState(*([P(self.axes, None)] * len(EngineState._fields)))
+
+    def make_superstep(self):
+        """The eager per-level program: one jitted shard_map serving every
+        level, logs/flags/metrics synced to host after each call."""
+        core = self._make_superstep_core()
+
+        def device_fn(level, anc, state: EngineState) -> StepOut:
+            state = jax.tree.map(lambda x: x[0], state)  # [1,·] → [·]
+            nstate, s1, s2, lm, flags, metrics = core(level, anc, state)
             nstate = jax.tree.map(lambda x: x[None], nstate)
             return StepOut(
                 state=nstate,
-                log_s1=out.log_s1[None],
-                log_s2=out.log_s2[None],
-                log_mask=out.log_mask[None],
-                flags=flags[None],
-                metrics=metrics[None],
+                log_s1=s1[None], log_s2=s2[None], log_mask=lm[None],
+                flags=flags[None], metrics=metrics[None],
             )
 
-        part_spec = P(axes)
-        state_specs = EngineState(*([P(axes, None)] * len(EngineState._fields)))
+        state_specs = self._state_specs()
         out_specs = StepOut(
             state=state_specs,
-            log_s1=P(axes, None), log_s2=P(axes, None), log_mask=P(axes, None),
-            flags=P(axes, None), metrics=P(axes, None),
+            log_s1=P(self.axes, None), log_s2=P(self.axes, None),
+            log_mask=P(self.axes, None),
+            flags=P(self.axes, None), metrics=P(self.axes, None),
         )
-        fn = jax.shard_map(
+        fn = shard_map(
             device_fn,
             mesh=self.mesh,
             in_specs=(P(), P(None, None), state_specs),
             out_specs=out_specs,
-            check_vma=False,
         )
         return jax.jit(fn)
 
     # ------------------------------------------------------------------
-    def run(self, pg: PartitionedGraph, validate: bool = True):
-        """Execute all supersteps on the real mesh; returns the circuit."""
+    # the fused whole-run program
+    # ------------------------------------------------------------------
+    def make_fused(self, num_edges: int):
+        """One compiled program for the entire run (DESIGN.md §4):
+
+          · ``lax.scan`` over all ``n_levels`` supersteps inside a single
+            shard_map (``anc_table`` is static per-level data; flags and
+            metrics are scan-stacked outputs);
+          · per-level on-device mate accumulation: each level's
+            ``(log_s1, log_s2)`` pairs are routed with the same
+            ``_route`` + ``all_to_all`` machinery to the device owning the
+            stub's shard of ``mate[2E]`` (stub s lives on device s // S)
+            and scattered in.  Later-level writes overwrite earlier ones —
+            exactly the host replay order — and within a level the pairs
+            are device-disjoint, so the scatter is conflict-free;
+          · Phase 3 on-device: all_gather the mate shards, then the pivot
+            splice + list-rank emission (``phase3_device``), replicated
+            per device, Pallas ``pointer_double`` as the doubling backend.
+
+        The program's outputs (circuit, mate, flags, metrics) are fetched
+        with ONE host transfer in :meth:`run`.
+        """
+        n, c = self.n, self.caps
+        axes = self.axes
+        L = self.n_levels
+        n_stubs = 2 * num_edges
+        S = max(1, -(-n_stubs // n))           # mate shard size per device
+        wcap = c.mate_ship_cap or 2 * c.pair_cap()
+        core = self._make_superstep_core()
+
+        def device_fn(anc, state: EngineState, sv) -> FusedOut:
+            state = jax.tree.map(lambda x: x[0], state)  # [1,·] → [·]
+            me = jax.lax.axis_index(axes).astype(I32)
+
+            def body(carry, lvl):
+                st, mate_sh = carry
+                nstate, s1, s2, lm, flags, metrics = core(lvl, anc, st)
+                # mate writes: both directions of every logged pair, routed
+                # to the stub's owning shard
+                ws = jnp.concatenate([s1, s2])
+                wv = jnp.concatenate([s2, s1])
+                wm = jnp.concatenate([lm, lm])
+                dest = jnp.where(wm, ws // S, n)
+                (bs, bv), bm, of_m = _route(dest, wm, (ws, wv), n, wcap)
+                r_s = jax.lax.all_to_all(bs, axes, 0, 0, tiled=True).reshape(-1)
+                r_v = jax.lax.all_to_all(bv, axes, 0, 0, tiled=True).reshape(-1)
+                r_m = jax.lax.all_to_all(bm, axes, 0, 0, tiled=True).reshape(-1)
+                off = jnp.where(r_m, r_s - me * S, S)   # masked → pad slot
+                mate_sh = mate_sh.at[off].set(jnp.where(r_m, r_v, -1))
+                flags = flags.at[3].set(flags[3] & ~of_m)
+                return (nstate, mate_sh), (flags, metrics)
+
+            mate0 = jnp.full((S + 1,), -1, dtype=I32)
+            (state, mate_sh), (flags, metrics) = jax.lax.scan(
+                body, (state, mate0), jnp.arange(L, dtype=I32)
+            )
+            mate = jax.lax.all_gather(mate_sh[:S], axes, tiled=True)[:n_stubs]
+            circuit, mate2, ok3 = phase3_device(
+                mate, sv, splice_rounds=c.phase3_rounds
+            )
+            return FusedOut(
+                circuit=circuit, mate=mate2,
+                flags=flags[None], metrics=metrics[None],
+                phase3_ok=ok3,
+            )
+
+        state_specs = self._state_specs()
+        out_specs = FusedOut(
+            circuit=P(None), mate=P(None),
+            flags=P(axes, None, None), metrics=P(axes, None, None),
+            phase3_ok=P(),
+        )
+        fn = shard_map(
+            device_fn,
+            mesh=self.mesh,
+            in_specs=(P(None, None), state_specs, P(None)),
+            out_specs=out_specs,
+        )
+        return jax.jit(fn)
+
+    # ------------------------------------------------------------------
+    def _stub_vertex(self, pg: PartitionedGraph) -> np.ndarray:
+        E = pg.graph.num_edges
+        sv = np.empty(2 * E, dtype=np.int64)
+        sv[0::2] = pg.graph.edge_u
+        sv[1::2] = pg.graph.edge_v
+        return sv
+
+    def _phase3_prog(self):
+        """Eager-path Phase 3: the same device program the fused path runs,
+        jitted standalone so the oracle produces byte-identical circuits."""
+        if self._p3 is None:
+            self._p3 = jax.jit(
+                partial(phase3_device, splice_rounds=self.caps.phase3_rounds)
+            )
+        return self._p3
+
+    def run(self, pg: PartitionedGraph, validate: bool = True,
+            fused: bool = True):
+        """Execute the full BSP run on the mesh; returns (circuit, metrics).
+
+        ``fused=True`` (default): one compiled device program + one host
+        sync.  ``fused=False``: the per-level eager oracle with host log
+        replay (per-level metrics visibility, same final circuit).
+        """
         state, anc_table = self.load(pg)
         anc = jnp.asarray(anc_table)
+        E = pg.graph.num_edges
+        sv = self._stub_vertex(pg)
+
+        if fused:
+            prog = self._fused.get(E)
+            if prog is None:
+                prog = self._fused[E] = self.make_fused(E)
+            out = prog(anc, state, jnp.asarray(sv, dtype=I32))
+            # the ONE device→host sync of the run
+            circuit, mate, flags, metrics, ok3 = jax.device_get(
+                (out.circuit, out.mate, out.flags, out.metrics,
+                 out.phase3_ok)
+            )
+            assert flags.all(), (
+                f"convergence/capacity flags failed: {flags.all((0, 1))}"
+            )
+            assert ok3, "Phase 3 pivot splice failed to converge"
+            assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
+            circuit = circuit.astype(np.int64)
+            assert (circuit >= 0).all(), "circuit emission left gaps"
+            if validate:
+                from .hierholzer import validate_circuit
+
+                validate_circuit(pg.graph, circuit)
+            metrics_list = [metrics[:, lvl] for lvl in range(self.n_levels)]
+            return circuit, metrics_list
+
+        # ---- eager oracle: per-level programs, host log replay ----
         step = self._step or self.make_superstep()
         self._step = step
         logs: List[Tuple[np.ndarray, np.ndarray]] = []
@@ -535,22 +735,20 @@ class DistributedEngine:
         flags = np.concatenate(all_flags, 0)
         assert flags.all(), f"convergence/capacity flags failed: {flags.all(0)}"
 
-        # Phase 3: replay logs (level order; later writes win), final splice,
-        # list-rank.
-        E = pg.graph.num_edges
+        # Phase 3: replay logs (level order; later writes win), then the
+        # same device Phase 3 program the fused path uses.
         mate = np.full(2 * E, -1, dtype=np.int64)
         for s1, s2 in logs:
             keep = (s1 < 2 * E) & (s2 < 2 * E)
             mate[s1[keep]] = s2[keep]
             mate[s2[keep]] = s1[keep]
         assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
-        sv = np.empty(2 * E, dtype=np.int64)
-        sv[0::2] = pg.graph.edge_u
-        sv[1::2] = pg.graph.edge_v
-        from .phase3 import circuit_from_mate_np, splice_components_np
-
-        mate = splice_components_np(mate, sv, mate >= 0)
-        circuit = circuit_from_mate_np(mate)
+        circuit_j, _, ok3 = self._phase3_prog()(
+            jnp.asarray(mate, dtype=I32), jnp.asarray(sv, dtype=I32)
+        )
+        assert bool(ok3), "Phase 3 pivot splice failed to converge"
+        circuit = np.asarray(circuit_j).astype(np.int64)
+        assert (circuit >= 0).all(), "circuit emission left gaps"
         if validate:
             from .hierholzer import validate_circuit
 

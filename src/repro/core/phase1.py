@@ -1,6 +1,7 @@
 """Jitted, vectorized Phase 1 — the per-partition superstep body.
 
-TPU-native replacement for the paper's sequential Hierholzer walk (Alg. 1):
+TPU-native replacement for the paper's sequential Hierholzer walk
+(Alg. 1; the stub representation and phase mapping are DESIGN.md §2):
 
   1. *pair* the stub pool (new local edges' stubs + inherited open path
      endpoints) per vertex — sort + parity pairing.  Odd leftovers are the
@@ -78,6 +79,14 @@ class Phase1Out(NamedTuple):
     log_mask: jnp.ndarray
     n_components: jnp.ndarray  # [] live components touching this partition
     flags: jnp.ndarray         # [3] bool: cc converged, splice converged, no overflow
+
+
+def pair_table_cap(pool: int, touch_cap: int) -> int:
+    """Width of Phase 1's compacted pair table: at most half the stub pool
+    can pair, plus the inherited touch pairs.  Shared with
+    ``EngineCaps.pair_cap`` so the engine's mate-log lane sizing can never
+    drift from the table the log is emitted from."""
+    return pool // 2 + touch_cap
 
 
 def empty_open(cap: int) -> OpenTable:
@@ -233,7 +242,7 @@ def phase1_local(
     # round (sorts, segment ops, relabels) streams half the rows.
     (q_s1, q_s2, q_v, q_la, q_c), q_m, _ = _compact(
         (q_s1, q_s2, q_v, q_la, q_c), q_m,
-        pool_stub.shape[0] // 2 + touch.mask.shape[0],
+        pair_table_cap(pool_stub.shape[0], touch.mask.shape[0]),
     )
     PC = q_s1.shape[0]
     q_c_pre = q_c          # pre-splice comps of the compacted pair table

@@ -7,14 +7,29 @@ Emission is *list ranking* by pointer doubling — O(log E) depth, fully
 vectorized — rather than the paper's sequential disk unroll.
 
 Both a NumPy (host/oracle) and a JAX (device) implementation live here;
-they share semantics and are cross-checked in tests.
+they share semantics and are cross-checked in tests.  The device path
+(:func:`splice_components_jnp` + :func:`circuit_from_mate_jnp` behind
+:func:`phase3_device`) is fully jittable and runs inside the fused engine
+program (DESIGN.md §4): the scipy ``connected_components`` call becomes
+pointer-doubling min-label propagation over the cycle structure (the
+Pallas ``pointer_double`` kernel, compiled on TPU / interpret elsewhere)
+and the per-vertex rotation becomes the same sort + segment voting scheme
+Phase 1 uses for its splice rounds.
 """
 from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels import ref as _kref
+from ..kernels.pointer_double import (fits_resident_vmem, pointer_double,
+                                      pointer_double_rank, resolve_interpret)
+from .phase1 import BIG, I32, _seg_starts
 
 
 def circuit_from_mate_np(mate: np.ndarray, start_stub: int = -1) -> np.ndarray:
@@ -50,12 +65,19 @@ def circuit_from_mate_np(mate: np.ndarray, start_stub: int = -1) -> np.ndarray:
     return order.astype(np.int64)
 
 
-def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray) -> jnp.ndarray:
+def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray,
+                          use_pallas: bool = False,
+                          interpret: Optional[bool] = None,
+                          block: int = 1024) -> jnp.ndarray:
     """JAX list-ranking twin of :func:`circuit_from_mate_np`.
 
     Returns arrival stubs in walk order, padded with -1 where ``mate`` is
     invalid (padding slots).  Static shapes: output has ``len(mate)//2``
     entries (E slots).
+
+    With ``use_pallas`` the doubling rounds run through the Pallas
+    ``pointer_double_rank`` kernel (compiled on TPU, interpret elsewhere);
+    both backends produce bit-identical output.
     """
     n_stubs = mate.shape[0]
     iota = jnp.arange(n_stubs, dtype=mate.dtype)
@@ -68,14 +90,40 @@ def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray) -> jnp.nda
     reach = jnp.zeros(n_stubs, dtype=bool).at[t].set(True)
     rounds = int(np.ceil(np.log2(max(2, n_stubs)))) + 1
 
-    def body(_, carry):
-        dist, reach, ptr = carry
-        dist = dist + dist[ptr]
-        reach = reach | reach[ptr]
-        ptr = ptr[ptr]
-        return dist, reach, ptr
+    # The compiled kernel keeps 3 tables VMEM-resident; beyond that budget
+    # fall back to the (bit-identical) jnp doubling, which XLA schedules
+    # against HBM.  Interpret mode has no residency constraint.
+    pad = (-n_stubs) % block
+    if use_pallas and not (resolve_interpret(interpret)
+                           or fits_resident_vmem(n_stubs + pad, 3)):
+        use_pallas = False
+    if use_pallas:
+        # Pad to a block multiple with self-looping halt slots (dist 0 so
+        # they never overflow; unreachable so they never enter the orbit).
+        ptr_p = ptr.astype(I32)
+        dist_p = dist
+        reach_p = reach.astype(I32)
+        if pad:
+            ip = jnp.arange(n_stubs, n_stubs + pad, dtype=I32)
+            ptr_p = jnp.concatenate([ptr_p, ip])
+            dist_p = jnp.concatenate([dist_p, jnp.zeros((pad,), jnp.int32)])
+            reach_p = jnp.concatenate([reach_p, jnp.zeros((pad,), I32)])
+        for _ in range(rounds):
+            ptr_p, dist_p, reach_p = pointer_double_rank(
+                ptr_p, dist_p, reach_p, block=block, interpret=interpret
+            )
+        dist = dist_p[:n_stubs]
+        reach = reach_p[:n_stubs] > 0
+    else:
+        def body(_, carry):
+            dist, reach, ptr = carry
+            dist = dist + dist[ptr]
+            reach = reach | reach[ptr]
+            ptr = ptr[ptr]
+            return dist, reach, ptr
 
-    dist, reach, ptr = jax.lax.fori_loop(0, rounds, body, (dist, reach, ptr))
+        dist, reach, ptr = jax.lax.fori_loop(0, rounds, body,
+                                             (dist, reach, ptr))
 
     on_orbit = reach & valid
     # Sort stubs by descending dist among orbit members; non-members last.
@@ -151,3 +199,157 @@ def splice_components_np(
         if not merged_any:
             break
     return mate
+
+
+# ---------------------------------------------------------------------------
+# device Phase 3 (jittable; runs inside the fused engine program)
+# ---------------------------------------------------------------------------
+
+def _cc_cycle_labels(mate: jnp.ndarray, valid: jnp.ndarray,
+                     interpret: Optional[bool] = None,
+                     block: int = 1024) -> jnp.ndarray:
+    """Component labels (min member stub id) of the sibling∘mate cycle
+    structure, by pointer-doubling min-label propagation.
+
+    Requires every valid stub to be mated (perfect matching), so each
+    component is a closed cycle and splits into two pointer orbits — the
+    forward and reverse traversals.  Doubling converges each orbit to its
+    own min in O(log) rounds; one final min with the sibling's label merges
+    the two orbits into the cycle id.
+    """
+    n = mate.shape[0]
+    iota = jnp.arange(n, dtype=I32)
+    nxt = jnp.where(valid, mate ^ 1, iota).astype(I32)  # walk successor
+    lab = iota
+    pad = (-n) % block
+    if pad:
+        ip = jnp.arange(n, n + pad, dtype=I32)          # self-looping pads
+        nxt = jnp.concatenate([nxt, ip])
+        lab = jnp.concatenate([lab, ip])
+    rounds = int(math.ceil(math.log2(max(2, n)))) + 1
+    # Compiled-kernel VMEM gate: the resident-table layout holds 2 [n]
+    # tables; whole-graph tables beyond the budget use the bit-identical
+    # jnp doubling round instead (interpret mode is unconstrained).
+    use_kernel = resolve_interpret(interpret) or fits_resident_vmem(n + pad, 2)
+    for _ in range(rounds):
+        if use_kernel:
+            nxt, lab = pointer_double(nxt, lab, block=block,
+                                      interpret=interpret)
+        else:
+            nxt, lab = _kref.pointer_double_ref(nxt, lab)
+    lab = lab[:n]
+    return jnp.minimum(lab, lab[iota ^ 1])
+
+
+def splice_components_jnp(
+    mate: jnp.ndarray,
+    stub_vertex: jnp.ndarray,
+    valid: jnp.ndarray,
+    rounds: int = 64,
+    interpret: Optional[bool] = None,
+    block: int = 1024,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Jittable twin of :func:`splice_components_np` for perfect matchings.
+
+    Merges the remaining edge-disjoint cycles that cross at shared (pivot)
+    vertices by mate rotations, exactly the operation the paper's Phase 3
+    performs when it "switches to a different cycle at the pivot vertex".
+    The scipy CC call becomes :func:`_cc_cycle_labels`; the per-round
+    rotation set is chosen by the same voting scheme as Phase 1's splice
+    rounds (each component votes its min candidate vertex, so a component
+    rotates at most once per round — safe concurrent merging with
+    guaranteed progress at the globally-min candidate vertex).
+
+    Requires every valid stub to be mated (true after all merge levels;
+    the engine asserts it).  Invalid slots (padding) are ignored.  Returns
+    ``(mate', converged)``; non-convergence within ``rounds`` only happens
+    on disconnected inputs, which downstream validation rejects anyway.
+    """
+    n = mate.shape[0]
+    iota = jnp.arange(n, dtype=I32)
+    mate = mate.astype(I32)
+    sv = stub_vertex.astype(I32)
+    lab0 = _cc_cycle_labels(mate, valid, interpret=interpret, block=block)
+
+    def round_fn(state):
+        mate, lab, _, r = state
+        cm = valid & (mate > iota)                 # canonical stub per pair
+        vkey = jnp.where(cm, sv, BIG)
+        ckey = jnp.where(cm, lab, BIG)
+        order = jnp.lexsort((ckey, vkey))
+        gv, gc = vkey[order], ckey[order]
+        gs = jnp.where(cm, iota, BIG)[order]
+        gm = cm[order]
+        # one representative pair per (vertex, component)
+        dup = jnp.concatenate(
+            [jnp.zeros((1,), bool), (gv[1:] == gv[:-1]) & (gc[1:] == gc[:-1])]
+        )
+        rep = gm & ~dup & (gv < BIG)
+        seg = _seg_starts(gv)
+        n_rep = jax.ops.segment_sum(rep.astype(I32), seg, num_segments=n)
+        cand = rep & (n_rep[seg] >= 2)             # ≥2 cycles at this pivot
+        # each component votes for its min candidate vertex (≤1 rotation
+        # per component per round)
+        cseg = jnp.where(cand, gc, n).astype(I32)  # comp ids are stub ids < n
+        vote = jax.ops.segment_min(jnp.where(cand, gv, BIG), cseg,
+                                   num_segments=n + 1)
+        voted = cand & (vote[jnp.clip(gc, 0, n)] == gv)
+        n_take = jax.ops.segment_sum(voted.astype(I32), seg, num_segments=n)
+        act = voted & (n_take[seg] >= 2)
+        # circular mate rotation within each pivot vertex's act group
+        akey = jnp.where(act, gv, BIG)
+        o2 = jnp.argsort(akey, stable=True)
+        hv, hs, hc = akey[o2], gs[o2], gc[o2]
+        hm = act[o2]
+        hstart = _seg_starts(hv)
+        hlast = jnp.concatenate([hv[1:] != hv[:-1], jnp.ones((1,), bool)])
+        hnxt = jnp.clip(
+            jnp.where(hlast, hstart, jnp.arange(n, dtype=I32) + 1), 0, n - 1
+        )
+        b = mate[jnp.clip(hs[hnxt], 0, n - 1)]     # mate of the next rep
+        # rotate: mate[a_i] ← b_{i+1}, mate[b_{i+1}] ← a_i.  a's are
+        # canonical reps, b's their (larger) mates at the same vertex —
+        # provably disjoint index sets, so the scatters never collide.
+        mpad = jnp.concatenate([mate, jnp.full((1,), -1, I32)])
+        mpad = mpad.at[jnp.where(hm, hs, n)].set(jnp.where(hm, b, -1))
+        mpad = mpad.at[jnp.where(hm, b, n)].set(jnp.where(hm, hs, -1))
+        mate_new = mpad[:n]
+        # relabel merged components to the min label at their pivot
+        minc = jax.ops.segment_min(jnp.where(hm, hc, BIG), hstart,
+                                   num_segments=n)
+        rot_c = minc[hstart]
+        lmap = jnp.concatenate([iota, jnp.zeros((1,), I32)])
+        lmap = lmap.at[jnp.where(hm, hc, n)].set(jnp.where(hm, rot_c, 0))
+        lab_new = lmap[jnp.clip(lab, 0, n - 1)]
+        changed = jnp.any(hm)
+        return mate_new, lab_new, changed, r - 1
+
+    def cond(state):
+        return state[2] & (state[3] > 0)
+
+    init = (mate, lab0, jnp.array(True), jnp.array(rounds, I32))
+    mate, _, still_changing, _ = jax.lax.while_loop(cond, round_fn, init)
+    return mate, ~still_changing
+
+
+def phase3_device(mate: jnp.ndarray, stub_vertex: jnp.ndarray,
+                  splice_rounds: int = 64,
+                  interpret: Optional[bool] = None,
+                  block: int = 1024):
+    """Full on-device Phase 3: pivot splice + list-rank emission.
+
+    Shared by the fused engine program (where it runs replicated inside the
+    same shard_map as the level scan) and the eager oracle path (where it
+    runs on the host-replayed mate), so the two paths produce byte-identical
+    circuits whenever their mate arrays agree.
+
+    Returns ``(circuit [E], mate', splice_converged)``.
+    """
+    valid = mate >= 0
+    mate2, ok = splice_components_jnp(mate, stub_vertex, valid,
+                                      rounds=splice_rounds,
+                                      interpret=interpret, block=block)
+    start = jnp.argmax(valid).astype(I32)
+    circuit = circuit_from_mate_jnp(mate2, start, use_pallas=True,
+                                    interpret=interpret, block=block)
+    return circuit, mate2, ok

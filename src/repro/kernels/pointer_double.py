@@ -1,8 +1,13 @@
-"""Pallas TPU kernel: one pointer-doubling round (the Phase-1/Phase-3 hot
+"""Pallas TPU kernels: pointer-doubling rounds (the Phase-1/Phase-3 hot
 loop of the Euler engine).
 
-  nxt' = nxt[nxt]          (jump)
-  lab' = min(lab, lab[nxt])  (min-label propagation)
+Two variants share the resident-table layout:
+
+  ``pointer_double``       nxt' = nxt[nxt];  lab' = min(lab, lab[nxt])
+                           (min-label connected components)
+  ``pointer_double_rank``  ptr' = ptr[ptr];  dist' = dist + dist[ptr];
+                           reach' = reach | reach[ptr]
+                           (list ranking for circuit emission)
 
 TPU adaptation: random gathers have no VMEM-tiled locality, so the kernel
 keeps the *jump table* resident — the grid tiles the query vector while
@@ -10,14 +15,45 @@ the full `nxt`/`lab` tables stream once into VMEM as a second operand
 block (valid for tables ≤ a few M entries; the distributed engine's
 per-partition tables are capacity-bounded exactly so this holds).  Gathers
 execute on the VPU via dynamic indexing into the resident block.
+
+Platform gating: ``interpret=None`` (the default) resolves to the compiled
+kernel on TPU and interpret mode everywhere else, so the same call sites
+serve both the production mesh and the CPU test/CI environment.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None → compiled on TPU, interpret elsewhere (CPU/GPU validation)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+# ~12 MB of VMEM for resident tables (16 MB/core minus query/output
+# blocks and double-buffering headroom).
+_VMEM_TABLE_BYTES = 12 * 2**20
+
+
+def fits_resident_vmem(n: int, n_tables: int, itemsize: int = 4) -> bool:
+    """Whether ``n_tables`` resident [n] tables fit the kernels' VMEM
+    budget.  The compiled TPU path keeps the full jump table(s) on-chip,
+    so callers with unbounded tables (e.g. whole-graph Phase 3) must fall
+    back to plain-jnp gathers (HBM-resident, XLA-scheduled) beyond this."""
+    return n * n_tables * itemsize <= _VMEM_TABLE_BYTES
+
+
+def _pick_block(n: int, block: int) -> int:
+    while n % block:
+        block //= 2
+    return max(1, block)
 
 
 def _kernel(q_nxt_ref, q_lab_ref, tbl_nxt_ref, tbl_lab_ref,
@@ -31,12 +67,12 @@ def _kernel(q_nxt_ref, q_lab_ref, tbl_nxt_ref, tbl_lab_ref,
 
 
 def pointer_double(nxt: jnp.ndarray, lab: jnp.ndarray,
-                   block: int = 2048, interpret: bool = True):
+                   block: int = 2048, interpret: Optional[bool] = None):
     """One doubling round over the full table.  nxt/lab [N] int32;
     entries must satisfy 0 ≤ nxt[i] < N."""
+    interpret = resolve_interpret(interpret)
     N = nxt.shape[0]
-    while N % block:
-        block //= 2
+    block = _pick_block(N, block)
     grid = (N // block,)
     out_shape = (
         jax.ShapeDtypeStruct((N,), nxt.dtype),
@@ -58,3 +94,57 @@ def pointer_double(nxt: jnp.ndarray, lab: jnp.ndarray,
         out_shape=out_shape,
         interpret=interpret,
     )(nxt, lab, nxt, lab)
+
+
+def _rank_kernel(q_ptr_ref, q_dist_ref, q_reach_ref,
+                 tbl_ptr_ref, tbl_dist_ref, tbl_reach_ref,
+                 o_ptr_ref, o_dist_ref, o_reach_ref):
+    qp = q_ptr_ref[...]
+    qd = q_dist_ref[...]
+    qr = q_reach_ref[...]
+    tp = tbl_ptr_ref[...]
+    td = tbl_dist_ref[...]
+    tr = tbl_reach_ref[...]
+    o_ptr_ref[...] = tp[qp]
+    o_dist_ref[...] = qd + td[qp]
+    o_reach_ref[...] = jnp.maximum(qr, tr[qp])
+
+
+def pointer_double_rank(ptr: jnp.ndarray, dist: jnp.ndarray,
+                        reach: jnp.ndarray, block: int = 2048,
+                        interpret: Optional[bool] = None):
+    """One list-ranking doubling round (Phase 3's circuit emission loop).
+
+    ptr/dist/reach [N] int32 (reach is 0/1); 0 ≤ ptr[i] < N.  Halt nodes
+    self-loop with dist 0, so dist accumulates hop counts to the halt and
+    reach propagates halt-reachability — exactly the pure-jnp body in
+    :func:`repro.core.phase3.circuit_from_mate_jnp`.
+    """
+    interpret = resolve_interpret(interpret)
+    N = ptr.shape[0]
+    block = _pick_block(N, block)
+    grid = (N // block,)
+    out_shape = (
+        jax.ShapeDtypeStruct((N,), ptr.dtype),
+        jax.ShapeDtypeStruct((N,), dist.dtype),
+        jax.ShapeDtypeStruct((N,), reach.dtype),
+    )
+    return pl.pallas_call(
+        _rank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),    # queries tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((N,), lambda i: (0,)),        # resident tables
+            pl.BlockSpec((N,), lambda i: (0,)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ptr, dist, reach, ptr, dist, reach)

@@ -18,6 +18,13 @@ def pointer_double_ref(nxt: jnp.ndarray, lab: jnp.ndarray):
     return nxt[nxt], jnp.minimum(lab, lab[nxt])
 
 
+def pointer_double_rank_ref(ptr: jnp.ndarray, dist: jnp.ndarray,
+                            reach: jnp.ndarray):
+    """One list-ranking round: dist' = dist + dist[ptr];
+    reach' = reach | reach[ptr]; ptr' = ptr[ptr]."""
+    return ptr[ptr], dist + dist[ptr], jnp.maximum(reach, reach[ptr])
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True) -> jnp.ndarray:
     """q [B,S,H,D], k/v [B,T,H,D] (same head count — GQA is handled by the

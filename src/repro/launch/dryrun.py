@@ -9,8 +9,10 @@ roofline inputs.
         --shape train_4k [--multi-pod] [--json out.json]
 
 With no --arch: sweep every registered architecture × shape (the 40-cell
-grid + the paper's own euler-rmat superstep).  Skipped cells (e.g.
-long_500k on full-attention archs) are reported as SKIP with the reason.
+grid + the paper's own euler-rmat cells: one BSP "superstep" and the
+scan-"fused" whole run — all levels + on-device mate accumulation +
+device Phase 3 in a single program).  Skipped cells (e.g. long_500k on
+full-attention archs) are reported as SKIP with the reason.
 """
 import argparse
 import json

@@ -12,23 +12,25 @@ from typing import Tuple
 
 import jax
 
+from ..parallel.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_devices: int = 0, tp: int = 1):
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     n = n_devices or len(jax.devices())
     assert n % tp == 0
-    return jax.make_mesh(
-        (n // tp, tp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // tp, tp), ("data", "model"))
+
+
+def make_part_mesh(n_parts: int, axis: str = "part"):
+    """1-D partition mesh for the Euler engine (one partition per device)."""
+    return make_mesh((n_parts,), (axis,))
 
 
 def flat_axes(mesh) -> Tuple[str, ...]:

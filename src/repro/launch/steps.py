@@ -403,8 +403,7 @@ def build_recsys_cell(arch: ArchConfig, cell: ShapeCell, mesh) -> Cell:
 # ---------------------------------------------------------------------------
 
 def build_euler_cell(arch: ArchConfig, cell: ShapeCell, mesh) -> Cell:
-    from ..core.engine import DistributedEngine, EngineState
-    from ..core.phase1 import BIG
+    from ..core.engine import DistributedEngine, EngineState, FusedOut, StepOut
 
     ecfg = arch.model
     axes = tuple(mesh.axis_names)
@@ -430,18 +429,38 @@ def build_euler_cell(arch: ArchConfig, cell: ShapeCell, mesh) -> Cell:
         le_lau=sds(c.edge_cap), le_lav=sds(c.edge_cap),
         le_mask=sds(c.edge_cap, jnp.bool_),
     )
-    level_abs = jax.ShapeDtypeStruct((), jnp.int32)
     anc_abs = jax.ShapeDtypeStruct((ecfg.n_levels, n), jnp.int32)
-    fn = eng.make_superstep()
+    state_specs = shd.euler_state_specs(mesh, axes)
 
     # estimate useful work: sort + pairing + CC over the pool
     pool = 2 * c.new_cap + c.open_cap
     flops = float(n * pool * np.log2(max(2, pool)) * 8)
 
-    state_specs = shd.euler_state_specs(mesh, axes)
+    if cell.name == "fused":
+        # the whole-run program: level scan + on-device mate accumulation
+        # + device Phase 3 (DESIGN.md §4), one host sync
+        E = ecfg.fused_edges or n * c.edge_cap
+        fn = eng.make_fused(E)
+        sv_abs = jax.ShapeDtypeStruct((2 * E,), jnp.int32)
+        in_sh = (NamedSharding(mesh, P(None, None)), _named(mesh, state_specs),
+                 NamedSharding(mesh, P(None)))
+        out_specs = FusedOut(
+            circuit=P(None), mate=P(None),
+            flags=P(axes, None, None), metrics=P(axes, None, None),
+            phase3_ok=P(),
+        )
+        p3 = float(2 * E * np.log2(max(2, 2 * E)) * 6)  # splice + list-rank
+        return Cell(
+            fn, (anc_abs, state_abs, sv_abs),
+            in_sh, _named(mesh, out_specs), flops * ecfg.n_levels + p3,
+            note="the full fused run: all levels + mate accumulation + "
+                 "device Phase 3, one host sync",
+        )
+
+    level_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = eng.make_superstep()
     in_sh = (NamedSharding(mesh, P()), NamedSharding(mesh, P(None, None)),
              _named(mesh, state_specs))
-    from ..core.engine import StepOut
     out_specs = StepOut(
         state=state_specs,
         log_s1=P(axes, None), log_s2=P(axes, None), log_mask=P(axes, None),

@@ -5,7 +5,7 @@ of the system: aggregation is ``jax.ops.segment_sum``/``segment_max`` over
 an edge index (src→dst scatter), which is also the regime of the paper's
 partition-centric graph representation — the partitioned Euler structures
 (``core.graph``) provide the node/edge partitioning used to shard these
-models (see DESIGN.md §4).
+models (see DESIGN.md §6).
 
 Graphs are padded: ``edge_src/edge_dst [E]`` with ``edge_mask``; masked
 edges point at a sink row (node N) that is sliced off after aggregation.

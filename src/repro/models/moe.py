@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..parallel.compat import shard_map
 from .layers import dense_init
 
 
@@ -243,14 +244,13 @@ def moe_ffn_ep(params, x, cfg: MoEConfig, mesh, dp_axes, ep_axis,
         return out, jax.lax.pmean(aux, dp_axes) * ep_size
 
     dp = tuple(dp_axes) if isinstance(dp_axes, (tuple, list)) else (dp_axes,)
-    fn = jax.shard_map(
+    fn = shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(P(dp, None), P(None, None),
                   P(ep_axis, dp, None), P(ep_axis, dp, None),
                   P(ep_axis, None, dp)),
         out_specs=(P(dp, None), P()),
-        check_vma=False,
     )
     out, aux = fn(x, params["router"], params["w_gate"], params["w_up"],
                   params["w_down"])

@@ -156,10 +156,11 @@ def test_euler_smoke():
     from repro.graphgen.eulerize import eulerian_rmat
     from repro.graphgen.partition import partition_vertices
 
+    from repro.launch.mesh import make_part_mesh
+
     g = eulerian_rmat(6, avg_degree=4, seed=0)
     pg = partition_graph(g, np.zeros(g.num_vertices, dtype=np.int64))
-    mesh = jax.make_mesh((1,), ("part",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_part_mesh(1)
     caps = DistributedEngine.size_caps(pg)
     eng = DistributedEngine(mesh, ("part",), caps, n_levels=1)
     circuit, metrics = eng.run(pg, validate=True)

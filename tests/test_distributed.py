@@ -29,11 +29,11 @@ def test_distributed_euler_engine_8_devices():
         from repro.core.phase2 import generate_merge_tree
         from repro.graphgen.eulerize import eulerian_rmat
         from repro.graphgen.partition import partition_vertices
+        from repro.launch.mesh import make_part_mesh
 
         g = eulerian_rmat(9, avg_degree=5, seed=3)
         pg = partition_graph(g, partition_vertices(g, 8, seed=3))
-        mesh = jax.make_mesh((8,), ("part",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_part_mesh(8)
         caps = DistributedEngine.size_caps(pg)
         tree = generate_merge_tree(pg.meta)
         eng = DistributedEngine(mesh, ("part",), caps,
@@ -42,6 +42,96 @@ def test_distributed_euler_engine_8_devices():
         print("CIRCUIT_OK", len(circuit), g.num_edges)
     """)
     assert "CIRCUIT_OK" in out
+
+
+def test_fused_matches_eager_byte_identical():
+    """Acceptance: the scan-fused whole-run program (one compiled program,
+    one host sync, on-device mate accumulation + device Phase 3) produces
+    byte-identical circuits and metrics to the per-level eager oracle."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core.graph import partition_graph
+        from repro.core.engine import DistributedEngine
+        from repro.core.phase2 import generate_merge_tree
+        from repro.graphgen.eulerize import eulerian_rmat
+        from repro.graphgen.partition import partition_vertices
+        from repro.launch.mesh import make_part_mesh
+
+        for seed in (3, 7):
+            g = eulerian_rmat(9, avg_degree=5, seed=seed)
+            pg = partition_graph(g, partition_vertices(g, 8, seed=seed))
+            mesh = make_part_mesh(8)
+            tree = generate_merge_tree(pg.meta)
+            eng = DistributedEngine(mesh, ("part",),
+                                    DistributedEngine.size_caps(pg),
+                                    n_levels=tree.height + 1)
+            c_f, m_f = eng.run(pg, validate=True, fused=True)
+            c_e, m_e = eng.run(pg, validate=True, fused=False)
+            assert (c_f == c_e).all(), "circuits differ"
+            assert len(m_f) == len(m_e)
+            for a, b in zip(m_f, m_e):
+                assert (np.asarray(a) == np.asarray(b)).all()
+        print("FUSED_EAGER_IDENTICAL_OK")
+    """)
+    assert "FUSED_EAGER_IDENTICAL_OK" in out
+
+
+def test_fused_single_host_sync():
+    """Acceptance: the fused path fetches device data exactly once per
+    run() — no per-level np.asarray of logs."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core.graph import partition_graph
+        from repro.core import engine as eng_mod
+        from repro.core.engine import DistributedEngine
+        from repro.core.phase2 import generate_merge_tree
+        from repro.graphgen.eulerize import eulerian_rmat
+        from repro.graphgen.partition import partition_vertices
+        from repro.launch.mesh import make_part_mesh
+
+        g = eulerian_rmat(8, avg_degree=5, seed=2)
+        pg = partition_graph(g, partition_vertices(g, 8, seed=2))
+        mesh = make_part_mesh(8)
+        tree = generate_merge_tree(pg.meta)
+        eng = DistributedEngine(mesh, ("part",),
+                                DistributedEngine.size_caps(pg),
+                                n_levels=tree.height + 1)
+        fetches = []
+        implicit = []
+
+        class JaxProxy:
+            # count explicit fetches without mutating the real jax module
+            def __getattr__(self, name):
+                if name == "device_get":
+                    def counting_get(x):
+                        fetches.append(1)
+                        return jax.device_get(x)
+                    return counting_get
+                return getattr(jax, name)
+
+        class NpProxy:
+            # catch implicit per-level syncs too: np.asarray on a jax
+            # Array (exactly how the eager path syncs its logs)
+            def __getattr__(self, name):
+                if name == "asarray":
+                    def counting_asarray(x, *a, **k):
+                        if isinstance(x, jax.Array):
+                            implicit.append(1)
+                        return np.asarray(x, *a, **k)
+                    return counting_asarray
+                return getattr(np, name)
+
+        real_jax, real_np = eng_mod.jax, eng_mod.np
+        eng_mod.jax, eng_mod.np = JaxProxy(), NpProxy()
+        try:
+            eng.run(pg, validate=True, fused=True)
+        finally:
+            eng_mod.jax, eng_mod.np = real_jax, real_np
+        assert sum(fetches) == 1, f"expected 1 host sync, saw {sum(fetches)}"
+        assert not implicit, f"{sum(implicit)} implicit np.asarray syncs"
+        print("SINGLE_SYNC_OK")
+    """)
+    assert "SINGLE_SYNC_OK" in out
 
 
 def test_distributed_euler_matches_host_metrics():
@@ -54,11 +144,11 @@ def test_distributed_euler_matches_host_metrics():
         from repro.core.phase2 import generate_merge_tree
         from repro.graphgen.eulerize import eulerian_rmat
         from repro.graphgen.partition import partition_vertices
+        from repro.launch.mesh import make_part_mesh
 
         g = eulerian_rmat(10, avg_degree=5, seed=1)
         pg = partition_graph(g, partition_vertices(g, 8, seed=1))
-        mesh = jax.make_mesh((8,), ("part",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_part_mesh(8)
         eng = DistributedEngine(mesh, ("part",),
                                 DistributedEngine.size_caps(pg),
                                 n_levels=generate_merge_tree(pg.meta).height + 1)
@@ -109,9 +199,9 @@ def test_compressed_psum_shard_map():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.optim.grad_compress import compressed_psum, init_compression
+        from repro.parallel.compat import make_mesh, shard_map
 
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
 
         def f(g):
             comp = init_compression({"g": g})
@@ -119,8 +209,8 @@ def test_compressed_psum_shard_map():
             return out["g"]
 
         g = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.3
-        fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                                   out_specs=P("data")))
+        fn = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                               out_specs=P("data")))
         out = np.asarray(fn(g))
         expect = np.mean(np.asarray(g).reshape(4, 1, 8), axis=0)
         err = np.abs(out - np.tile(expect, (4, 1))).max()

@@ -7,7 +7,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.pointer_double import pointer_double
+from repro.kernels.pointer_double import (pointer_double,
+                                          pointer_double_rank,
+                                          resolve_interpret)
 from repro.kernels.segment_reduce import segment_sum_sorted
 
 
@@ -62,6 +64,61 @@ def test_pointer_double_converges_on_cycle():
     for _ in range(int(np.ceil(np.log2(N))) + 1):
         nxt, lab = pointer_double(nxt, lab, interpret=True)
     assert int(jnp.max(lab)) == 0
+
+
+def test_pointer_double_platform_autodetect():
+    """interpret=None resolves by backend: compiled only on TPU."""
+    expect = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is expect
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # the default path must run (and agree with the oracle) on any backend
+    rng = np.random.default_rng(0)
+    N = 1024
+    nxt = jnp.asarray(rng.integers(0, N, N), jnp.int32)
+    lab = jnp.asarray(rng.permutation(N), jnp.int32)
+    nk, lk = pointer_double(nxt, lab)
+    nr, lr = ref.pointer_double_ref(nxt, lab)
+    assert (np.asarray(nk) == np.asarray(nr)).all()
+    assert (np.asarray(lk) == np.asarray(lr)).all()
+
+
+@pytest.mark.parametrize("N,block", [(1024, 256), (4096, 2048), (8192, 512)])
+def test_pointer_double_rank_sweep(N, block):
+    """The list-ranking kernel matches the pure-jnp doubling round."""
+    rng = np.random.default_rng(N + 1)
+    ptr = rng.integers(0, N, N).astype(np.int32)
+    t = int(ptr[0])
+    ptr[t] = t                                    # halt node self-loops
+    dist = np.ones(N, np.int32)
+    dist[t] = 0
+    reach = np.zeros(N, np.int32)
+    reach[t] = 1
+    pk, dk, rk = pointer_double_rank(jnp.asarray(ptr), jnp.asarray(dist),
+                                     jnp.asarray(reach), block=block,
+                                     interpret=True)
+    pr, dr, rr = ref.pointer_double_rank_ref(jnp.asarray(ptr),
+                                             jnp.asarray(dist),
+                                             jnp.asarray(reach))
+    assert (np.asarray(pk) == np.asarray(pr)).all()
+    assert (np.asarray(dk) == np.asarray(dr)).all()
+    assert (np.asarray(rk) == np.asarray(rr)).all()
+
+
+def test_pointer_double_rank_ranks_a_list():
+    """Doubling rounds of the rank kernel compute list ranks on a chain."""
+    N = 256
+    ptr = np.minimum(np.arange(N) + 1, N - 1).astype(np.int32)  # i → i+1
+    dist = np.ones(N, np.int32)
+    dist[N - 1] = 0                                # halt at the tail
+    reach = np.zeros(N, np.int32)
+    reach[N - 1] = 1
+    p, d, r = jnp.asarray(ptr), jnp.asarray(dist), jnp.asarray(reach)
+    for _ in range(int(np.ceil(np.log2(N))) + 1):
+        p, d, r = pointer_double_rank(p, d, r, interpret=True)
+    assert (np.asarray(r) == 1).all()
+    # dist[i] = hops from i to the tail
+    assert (np.asarray(d) == (N - 1 - np.arange(N))).all()
 
 
 @pytest.mark.parametrize("B,S,H,D,T", [(1, 128, 1, 64, 128),

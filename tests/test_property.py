@@ -1,5 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

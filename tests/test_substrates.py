@@ -129,9 +129,10 @@ def test_elastic_restore_changes_mesh(tmp_path):
     """Checkpoint saved from one mesh restores onto a different mesh."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.parallel.compat import make_mesh
+
     devs = jax.devices()
-    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh1 = make_mesh((1, 1), ("data", "model"))
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     ckpt = CheckpointManager(str(tmp_path))
     ckpt.save(1, tree, blocking=True)
