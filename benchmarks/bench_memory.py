@@ -12,24 +12,28 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import partition_graph
-from repro.core.host_engine import HostEngine
 from repro.core.memory import ideal_curve
+from repro.euler import solve
 from repro.graphgen.eulerize import eulerian_rmat
 from repro.graphgen.partition import partition_vertices
 
 
 def run(scale=14, parts=8, seed=0):
     g = eulerian_rmat(scale, avg_degree=5, seed=seed)
-    pg = partition_graph(g, partition_vertices(g, parts, seed=seed))
-    variants = {
-        "current": HostEngine(pg),
-        "dedup": HostEngine(pg, remote_dedup=True),
-        "proposed": HostEngine(pg, remote_dedup=True, deferred_transfer=True),
+    part = partition_vertices(g, parts, seed=seed)
+    pg = partition_graph(g, part)
+    variants = {  # §5 heuristic combinations through the facade
+        "current": dict(remote_dedup=False, deferred_transfer=False),
+        "dedup": dict(remote_dedup=True, deferred_transfer=False),
+        "proposed": dict(remote_dedup=True, deferred_transfer=True),
     }
     out = {"graph": {"V": g.num_vertices, "E": g.num_edges,
                      "cut%": round(100 * pg.cut_fraction(), 1)}}
-    for name, eng in variants.items():
-        res = eng.run(validate=True)
+    results = {}
+    for name, flags in variants.items():
+        res = solve(g, part_of_vertex=part, backend="host", n_parts=parts,
+                    **flags).validate()
+        results[name] = res
         out[name] = {
             "cumulative": [ls.cumulative for ls in res.levels],
             "average": [round(ls.average, 1) for ls in res.levels],
@@ -41,8 +45,7 @@ def run(scale=14, parts=8, seed=0):
                          for ls in res.levels],
         }
     base = out["current"]["cumulative"]
-    parts_per_level = [len(ls.states) for ls in variants["current"]
-                       .level_stats]
+    parts_per_level = [len(ls.states) for ls in results["current"].levels]
     out["ideal"] = [round(base[0] / parts_per_level[0] * n, 1)
                     for n in parts_per_level]
     # §5 claims

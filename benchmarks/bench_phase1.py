@@ -8,16 +8,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.graph import partition_graph
-from repro.core.host_engine import HostEngine
+from repro.euler import solve
 from repro.graphgen.eulerize import eulerian_rmat
-from repro.graphgen.partition import partition_vertices
 
 
 def run(scale=14, parts=8, seed=0):
     g = eulerian_rmat(scale, avg_degree=5, seed=seed)
-    pg = partition_graph(g, partition_vertices(g, parts, seed=seed))
-    res = HostEngine(pg).run(validate=True)
+    res = solve(g, backend="host", n_parts=parts, partition_seed=seed,
+                remote_dedup=False, deferred_transfer=False).validate()
     xs, ys = [], []
     for ls in res.levels:
         for pid, cost in ls.phase1_cost.items():

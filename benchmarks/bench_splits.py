@@ -10,7 +10,7 @@ import time
 import numpy as np
 
 from repro.core.graph import partition_graph
-from repro.core.host_engine import HostEngine
+from repro.euler import solve
 from repro.graphgen.eulerize import eulerian_rmat
 from repro.graphgen.partition import partition_vertices
 
@@ -21,7 +21,8 @@ def run(scale=13, parts=8, seed=0):
     part = partition_vertices(g, parts, seed=seed)
     pg = partition_graph(g, part)
     build_s = time.perf_counter() - t0   # "create partition object"
-    res = HostEngine(pg).run(validate=True)
+    res = solve(g, part_of_vertex=part, backend="host", n_parts=parts,
+                remote_dedup=False, deferred_transfer=False).validate()
     rows = []
     for ls in res.levels:
         for pid in sorted(ls.phase1_seconds):

@@ -35,6 +35,7 @@ def main():
     suites = {
         "scaling": lambda: bench_scaling.run(series=scaling_series),
         "fused": lambda: bench_scaling.run_device(),
+        "serving": lambda: bench_scaling.run_serving(),
         "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
                                            parts=kw["parts"]),
         "phase1": lambda: bench_phase1.run(**kw),
@@ -68,6 +69,11 @@ def _summarize(name, res):
             print(f"  {r['graph']:>10s}: fused={r['fused_s']}s "
                   f"eager={r['eager_s']}s over {r['levels']} levels "
                   f"→ {r['speedup']}x")
+    elif name == "serving":
+        for r in res:
+            print(f"  {r['graph']:>10s}: pool={r['pool']} warm "
+                  f"{r['circuits/s']} circuits/s "
+                  f"({r['compiles']} compiles, {r['hits']} cache hits)")
     elif name == "phase1":
         print(f"  fit over {res['points']} points: R2={res['r2']}")
     elif name == "memory":

@@ -1,51 +1,43 @@
-"""The paper's algorithm on a device mesh (shard_map BSP supersteps).
+"""The paper's algorithm on a device mesh, via the public solver facade.
 
     PYTHONPATH=src python examples/euler_distributed.py
 
 Uses 8 simulated devices: one partition per device, pathMap shipping via
-all_to_all, §5 heuristics structurally on.  The default run is the fused
-program — every level scanned inside ONE compiled program, mate logs
-accumulated on-device, Phase 3 on-device, one host sync — with the eager
-per-level oracle run afterwards for comparison.  The same engine lowers
-on the 2×16×16 production mesh in the dry-run.
+all_to_all, §5 heuristics structurally on.  ``EulerSolver`` owns the whole
+pipeline (partitioning, merge-tree planning, capacity sizing, mesh); the
+default solve runs the fused program — every level scanned inside ONE
+compiled program, mate logs accumulated on-device, Phase 3 on-device, one
+host sync — with the eager per-level oracle run afterwards for comparison.
+A second fused solve demonstrates the shape-bucket program cache (zero
+retrace).  The same engine lowers on the 2×16×16 production mesh in the
+dry-run.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import time
-
 import jax
-import numpy as np
 
-from repro.core.engine import DistributedEngine
-from repro.core.graph import partition_graph
-from repro.core.phase2 import generate_merge_tree
+from repro.euler import EulerSolver
 from repro.graphgen.eulerize import eulerian_rmat
-from repro.graphgen.partition import partition_vertices
-from repro.launch.mesh import make_part_mesh
 
 graph = eulerian_rmat(scale=10, avg_degree=5, seed=1)
-pg = partition_graph(graph, partition_vertices(graph, 8, seed=1))
-tree = generate_merge_tree(pg.meta)
+solver = EulerSolver(n_parts=8)
+
+res = solver.solve(graph).validate()            # fused (default)
 print(f"V={graph.num_vertices} E={graph.num_edges} "
-      f"merge-tree height={tree.height}")
+      f"merge-tree height={res.tree.height}")
+print(f"fused circuit valid: {len(res.circuit)} edges, one compiled program "
+      f"+ one host sync on {len(jax.devices())} devices "
+      f"({res.timings['total_s']:.2f}s incl. compile; "
+      f"{res.padded_edges} bucket-padding edges stripped)")
 
-mesh = make_part_mesh(8)
-caps = DistributedEngine.size_caps(pg)
-engine = DistributedEngine(mesh, ("part",), caps, n_levels=tree.height + 1)
+warm = solver.solve(graph).validate()           # same bucket → cache hit
+print(f"warm solve: {warm.timings['total_s']:.2f}s, cache hit={warm.cache.hit}"
+      f" ({warm.cache.compiles} program compile(s) in the session)")
 
-t0 = time.perf_counter()
-circuit, metrics = engine.run(pg, validate=True)          # fused (default)
-t_fused = time.perf_counter() - t0
-print(f"fused circuit valid: {len(circuit)} edges, one compiled program + "
-      f"one host sync on {len(jax.devices())} devices ({t_fused:.2f}s incl. "
-      f"compile)")
-
-t0 = time.perf_counter()
-circuit_e, metrics_e = engine.run(pg, validate=True, fused=False)
-t_eager = time.perf_counter() - t0
-print(f"eager oracle: {tree.height + 1} per-level programs "
-      f"({t_eager:.2f}s incl. compile); byte-identical="
-      f"{bool((circuit == circuit_e).all())}")
-for lvl, m in enumerate(metrics):
-    print(f"  superstep {lvl}: pathMap state {int(np.asarray(m).sum())} Int64s")
+res_e = solver.solve(graph, fused=False).validate()
+print(f"eager oracle: {res.supersteps} per-level programs "
+      f"({res_e.timings['total_s']:.2f}s incl. compile); byte-identical="
+      f"{bool((res.circuit == res_e.circuit).all())}")
+for ls in res.levels:
+    print(f"  superstep {ls.level}: pathMap state {ls.cumulative} Int64s")

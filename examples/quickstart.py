@@ -1,29 +1,23 @@
-"""Quickstart: find an Euler circuit with the partition-centric engine.
+"""Quickstart: find an Euler circuit through the public solver facade.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Generates an Eulerian RMAT graph (the paper's §4.2 pipeline), partitions
-it, runs the exact host BSP engine (Phases 1–3), validates the circuit,
-and prints the paper's Int64 memory-state metric per level.
+Generates an Eulerian RMAT graph (the paper's §4.2 pipeline) and hands it
+to ``repro.euler.solve`` — partitioning, merge-tree planning and engine
+choice all live behind the facade.  ``backend="host"`` runs the exact
+host BSP reference engine (Phases 1–3) with the paper's Int64
+memory-state metric per level; ``.validate()`` raises if the circuit is
+not a valid Euler circuit.
 """
-import numpy as np
-
-from repro.core.graph import partition_graph
-from repro.core.host_engine import HostEngine
+from repro.euler import solve
 from repro.graphgen.eulerize import eulerian_rmat
-from repro.graphgen.partition import partition_vertices
 
 graph = eulerian_rmat(scale=12, avg_degree=5, seed=0)
 print(f"graph: {graph.num_vertices} vertices, {graph.num_edges} edges, "
       f"eulerian={graph.is_eulerian()}")
 
-parts = partition_vertices(graph, 8, seed=0)
-pg = partition_graph(graph, parts)
-print(f"8 partitions, edge-cut {pg.cut_fraction()*100:.0f}%, "
-      f"imbalance {pg.vertex_imbalance()*100:.0f}%")
-
-engine = HostEngine(pg, remote_dedup=True, deferred_transfer=True)
-result = engine.run(validate=True)   # raises if the circuit is invalid
+result = solve(graph, backend="host", n_parts=8,
+               remote_dedup=True, deferred_transfer=True).validate()
 
 print(f"Euler circuit found: {len(result.circuit)} edges, "
       f"{result.supersteps} BSP supersteps (⌈log₂ 8⌉+1 = 4)")

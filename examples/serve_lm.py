@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/serve_lm.py
 """
-from repro.launch.serve import main
+from repro.launch.serve import main_lm as main
 
 main(["--arch", "smollm-360m", "--batch", "4", "--prompt-len", "32",
       "--gen", "16"])

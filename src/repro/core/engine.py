@@ -37,8 +37,10 @@ Execution modes (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from functools import partial
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -210,6 +212,7 @@ class DistributedEngine:
         n_levels: int,
         remote_dedup: bool = True,
         deferred_transfer: bool = True,
+        on_trace: Optional[Callable[[], None]] = None,
     ):
         self.mesh = mesh
         self.axes = axis_names
@@ -218,6 +221,9 @@ class DistributedEngine:
         self.n = int(np.prod([mesh.shape[a] for a in axis_names]))
         self.remote_dedup = remote_dedup
         self.deferred_transfer = deferred_transfer
+        # trace probe: called once each time a whole-run/superstep program
+        # is (re)traced by jit — the solver's compile-cache accounting
+        self.on_trace = on_trace
         self._step = None
         self._fused: Dict[int, object] = {}    # E → compiled fused program
         self._p3 = None                        # eager-path Phase 3 program
@@ -580,7 +586,13 @@ class DistributedEngine:
             in_specs=(P(), P(None, None), state_specs),
             out_specs=out_specs,
         )
-        return jax.jit(fn)
+
+        def traced(level, anc, state):
+            if self.on_trace is not None:
+                self.on_trace()
+            return fn(level, anc, state)
+
+        return jax.jit(traced)
 
     # ------------------------------------------------------------------
     # the fused whole-run program
@@ -661,7 +673,13 @@ class DistributedEngine:
             in_specs=(P(None, None), state_specs, P(None)),
             out_specs=out_specs,
         )
-        return jax.jit(fn)
+
+        def traced(anc, state, sv):
+            if self.on_trace is not None:
+                self.on_trace()
+            return fn(anc, state, sv)
+
+        return jax.jit(traced)
 
     # ------------------------------------------------------------------
     def _stub_vertex(self, pg: PartitionedGraph) -> np.ndarray:
@@ -680,14 +698,18 @@ class DistributedEngine:
             )
         return self._p3
 
-    def run(self, pg: PartitionedGraph, validate: bool = True,
-            fused: bool = True):
-        """Execute the full BSP run on the mesh; returns (circuit, metrics).
+    def _run(self, pg: PartitionedGraph, fused: bool = True):
+        """Execute the full BSP run on the mesh; returns the unified
+        :class:`repro.euler.result.EulerResult` (internal — call sites go
+        through :class:`repro.euler.EulerSolver`).
 
         ``fused=True`` (default): one compiled device program + one host
         sync.  ``fused=False``: the per-level eager oracle with host log
         replay (per-level metrics visibility, same final circuit).
         """
+        from ..euler.result import EulerResult
+
+        t0 = time.perf_counter()
         state, anc_table = self.load(pg)
         anc = jnp.asarray(anc_table)
         E = pg.graph.num_edges
@@ -710,12 +732,15 @@ class DistributedEngine:
             assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
             circuit = circuit.astype(np.int64)
             assert (circuit >= 0).all(), "circuit emission left gaps"
-            if validate:
-                from .hierholzer import validate_circuit
-
-                validate_circuit(pg.graph, circuit)
             metrics_list = [metrics[:, lvl] for lvl in range(self.n_levels)]
-            return circuit, metrics_list
+            return EulerResult(
+                circuit=circuit, mate=mate.astype(np.int64),
+                tree=self.tree,
+                levels=EulerResult.levels_from_metrics(metrics_list),
+                supersteps=self.n_levels, backend="device", fused=True,
+                graph=pg.graph, phase3_converged=bool(ok3),
+                timings={"run_s": time.perf_counter() - t0},
+            )
 
         # ---- eager oracle: per-level programs, host log replay ----
         step = self._step or self.make_superstep()
@@ -743,17 +768,37 @@ class DistributedEngine:
             mate[s1[keep]] = s2[keep]
             mate[s2[keep]] = s1[keep]
         assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
-        circuit_j, _, ok3 = self._phase3_prog()(
+        circuit_j, mate2_j, ok3 = self._phase3_prog()(
             jnp.asarray(mate, dtype=I32), jnp.asarray(sv, dtype=I32)
         )
         assert bool(ok3), "Phase 3 pivot splice failed to converge"
         circuit = np.asarray(circuit_j).astype(np.int64)
         assert (circuit >= 0).all(), "circuit emission left gaps"
-        if validate:
-            from .hierholzer import validate_circuit
+        return EulerResult(
+            circuit=circuit, mate=np.asarray(mate2_j).astype(np.int64),
+            tree=self.tree, levels=EulerResult.levels_from_metrics(metrics),
+            supersteps=self.n_levels, backend="device", fused=False,
+            graph=pg.graph, phase3_converged=bool(ok3),
+            timings={"run_s": time.perf_counter() - t0},
+        )
 
-            validate_circuit(pg.graph, circuit)
-        return circuit, metrics
+    def run(self, pg: PartitionedGraph, validate: bool = True,
+            fused: bool = True):
+        """Deprecated: use ``repro.euler.EulerSolver`` / ``solve``.
+
+        Thin back-compat shim preserving the old ``(circuit, metrics)``
+        return shape; new code gets a typed :class:`EulerResult` from the
+        facade instead.
+        """
+        warnings.warn(
+            "DistributedEngine.run is deprecated; use repro.euler.solve / "
+            "EulerSolver (returns a typed EulerResult)",
+            DeprecationWarning, stacklevel=2,
+        )
+        res = self._run(pg, fused=fused)
+        if validate:
+            res.validate()
+        return res.circuit, res.metrics_arrays()
 
 
 def _fit(x: jnp.ndarray, cap: int, fill=None):

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -38,6 +39,17 @@ from .phase2 import MergeTree, ancestor_at_level, generate_merge_tree, merge_lev
 from .phase3 import circuit_from_mate_np, splice_components_np
 
 
+def __getattr__(name):
+    # Deprecation shim: ``EulerResult`` moved to ``repro.euler.result``
+    # (one unified result type for both backends).  Lazy to avoid an
+    # import cycle through the facade package.
+    if name == "EulerResult":
+        from ..euler.result import EulerResult
+
+        return EulerResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 @dataclasses.dataclass
 class PartState:
     """In-memory pathMap state of one active partition (host mirror)."""
@@ -47,15 +59,6 @@ class PartState:
     open_stubs: np.ndarray          # unpaired path-endpoint stubs
     touch_stubs: np.ndarray         # representative paired stubs at boundary
     n_components: int = 0
-
-
-@dataclasses.dataclass
-class EulerResult:
-    circuit: np.ndarray             # arrival stubs in walk order
-    mate: np.ndarray
-    tree: MergeTree
-    levels: List[LevelStats]
-    supersteps: int
 
 
 class HostEngine:
@@ -96,7 +99,13 @@ class HostEngine:
             self.act_level[e], self.act_dest[e] = pair_cache[key]
 
     # ------------------------------------------------------------------
-    def run(self, validate: bool = True) -> EulerResult:
+    def _run(self):
+        """Execute the full host BSP run; returns the unified
+        :class:`repro.euler.result.EulerResult` (internal — call sites go
+        through :class:`repro.euler.EulerSolver`)."""
+        from ..euler.result import EulerResult
+
+        t0 = time.perf_counter()
         states = self._init_states()
         new_local = {p.pid: p.local_eids for p in self.pg.parts}
         self._run_level(states, level=0, new_local=new_local, comm={})
@@ -110,17 +119,32 @@ class HostEngine:
         assert n_unmated == 0, f"{n_unmated} stubs left unmated at root"
         self.mate = splice_components_np(self.mate, self.stub_vertex, valid)
         circuit = circuit_from_mate_np(self.mate)
-        if validate:
-            from .hierholzer import validate_circuit
-
-            validate_circuit(self.pg.graph, circuit)
         return EulerResult(
             circuit=circuit,
             mate=self.mate,
             tree=self.tree,
             levels=self.level_stats,
             supersteps=self.tree.supersteps(),
+            backend="host",
+            fused=False,
+            graph=self.pg.graph,
+            timings={"run_s": time.perf_counter() - t0},
         )
+
+    def run(self, validate: bool = True):
+        """Deprecated: use ``repro.euler.solve(graph, backend="host")``.
+
+        Thin back-compat shim; the returned object is the unified
+        :class:`EulerResult` (a superset of the old fields)."""
+        warnings.warn(
+            'HostEngine.run is deprecated; use repro.euler.solve(graph, '
+            'backend="host") / EulerSolver',
+            DeprecationWarning, stacklevel=2,
+        )
+        res = self._run()
+        if validate:
+            res.validate()
+        return res
 
     # ------------------------------------------------------------------
     def _init_states(self) -> Dict[int, PartState]:

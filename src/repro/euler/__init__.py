@@ -1,0 +1,21 @@
+"""`repro.euler` — the supported public API for the paper's pipeline.
+
+    from repro.euler import solve, solve_many, EulerSolver, EulerResult
+
+Everything else (``core.engine.DistributedEngine``, ``core.host_engine``,
+the phase modules) is internal; the engine classes are re-exported here
+for advanced uses (AOT cells, dry-runs) but their ``run`` entry points
+are deprecated in favour of the solver.  See DESIGN.md §7.
+"""
+from ..core.engine import (DistributedEngine, EngineCaps, EngineState,
+                           FusedOut, StepOut)
+from ..core.host_engine import HostEngine
+from .bucket import ceil_pow2, pad_graph, round_caps, strip_circuit
+from .result import CacheStats, EulerResult
+from .solver import EulerSolver, solve, solve_many
+
+__all__ = [
+    "solve", "solve_many", "EulerSolver", "EulerResult", "CacheStats",
+    "DistributedEngine", "EngineCaps", "EngineState", "FusedOut", "StepOut",
+    "HostEngine", "ceil_pow2", "pad_graph", "round_caps", "strip_circuit",
+]

@@ -1,0 +1,107 @@
+"""Geometric shape buckets for the multi-graph serving path (DESIGN.md §7).
+
+The fused whole-run program is compiled for static shapes: the padded
+per-device tables (:class:`EngineCaps`), the number of scan levels, and
+the global stub space ``2E``.  To amortize one lowered program across many
+request graphs, a graph is *padded* into the smallest geometric bucket
+that fits it:
+
+  · ``E`` rounds up to the next power of two (``e_cap``) by appending a
+    dummy edge cycle anchored at one real vertex — degrees stay even, the
+    graph stays connected, and the dummy section of the resulting circuit
+    is contiguous, so stripping it back out leaves a valid Euler circuit
+    of the original graph;
+  · every table capacity from ``size_caps`` rounds up to a power of two.
+
+The bucket key is ``(e_cap, n_parts, n_levels, rounded_caps)``; any two
+graphs sharing a key run through the *same* compiled program with zero
+retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from ..core.engine import EngineCaps
+from ..core.graph import Graph
+
+
+def ceil_pow2(x: int, lo: int = 1) -> int:
+    """Smallest power of two ≥ max(x, lo)."""
+    v = max(int(x), int(lo), 1)
+    return 1 << (v - 1).bit_length()
+
+
+def round_caps(caps: EngineCaps, lo: int = 16) -> EngineCaps:
+    """Round every table capacity up to a power of two (geometric bucket).
+    Round budgets and flags are kept verbatim; zero lane overrides stay
+    zero (they already default to the rounded table width)."""
+
+    def r(v: int) -> int:
+        return ceil_pow2(v, lo) if v else 0
+
+    return dataclasses.replace(
+        caps,
+        edge_cap=r(caps.edge_cap),
+        park_cap=r(caps.park_cap),
+        ship_cap=r(caps.ship_cap),
+        new_cap=r(caps.new_cap),
+        open_cap=r(caps.open_cap),
+        touch_cap=r(caps.touch_cap),
+        open_ship_cap=r(caps.open_ship_cap),
+        touch_ship_cap=r(caps.touch_ship_cap),
+        mate_ship_cap=r(caps.mate_ship_cap),
+    )
+
+
+def pad_graph(graph: Graph, part_of_vertex: np.ndarray,
+              e_cap: int) -> Tuple[Graph, np.ndarray]:
+    """Pad ``graph`` to exactly ``e_cap`` edges with a dummy cycle.
+
+    The ``k = e_cap - E`` dummy edges form a closed cycle through ``k-1``
+    fresh vertices anchored at one real vertex (a self-loop when k == 1),
+    all assigned to the anchor's partition — so no cut edges are added and
+    the merge tree is untouched.  Returns the padded graph and the padded
+    partition assignment.
+    """
+    E = graph.num_edges
+    k = int(e_cap) - E
+    assert k >= 0, (e_cap, E)
+    if k == 0:
+        return graph, part_of_vertex
+    assert E > 0, "cannot pad an empty graph"
+    anchor = int(graph.edge_u[0])
+    V = graph.num_vertices
+    if k == 1:
+        eu = np.array([anchor], dtype=np.int64)
+        ev = np.array([anchor], dtype=np.int64)
+        n_new = 0
+    else:
+        dummies = V + np.arange(k - 1, dtype=np.int64)
+        walk = np.concatenate([[anchor], dummies, [anchor]])
+        eu, ev = walk[:-1], walk[1:]
+        n_new = k - 1
+    g2 = Graph(
+        num_vertices=V + n_new,
+        edge_u=np.concatenate([graph.edge_u, eu]).astype(np.int64),
+        edge_v=np.concatenate([graph.edge_v, ev]).astype(np.int64),
+    )
+    part2 = np.concatenate([
+        np.asarray(part_of_vertex, dtype=np.int64),
+        np.full(n_new, int(part_of_vertex[anchor]), dtype=np.int64),
+    ])
+    return g2, part2
+
+
+def strip_circuit(circuit: np.ndarray, num_edges: int) -> np.ndarray:
+    """Drop the dummy-edge arrivals from a padded-graph circuit.
+
+    The dummy cycle touches the real graph at a single anchor vertex and
+    its interior vertices have degree 2, so its traversal is one
+    contiguous closed sub-walk through the anchor — removing those
+    arrivals leaves a valid Euler circuit of the original graph.
+    """
+    c = np.asarray(circuit, dtype=np.int64)
+    return c[(c >> 1) < num_edges]

@@ -1,0 +1,251 @@
+"""`EulerSolver` — the one public entry point to the paper's pipeline.
+
+The solver owns everything call sites used to assemble by hand: vertex
+partitioning, merge-tree planning, ``size_caps`` table sizing, mesh
+selection, backend choice (``device`` — the shard_map BSP engine — or
+``host`` — the exact reference engine), and the device execution mode
+(scan-``fused`` whole-run program vs the ``eager`` per-level oracle).
+
+A solver instance is a *persistent serving session*: device solves pad
+each request graph into a geometric shape bucket (``bucket.py``) keyed
+into a compiled-program cache, so the second and every later graph in a
+bucket reuses the lowered fused scan with zero retrace.  Cache accounting
+(hits / misses / traces) is reported in every result's ``cache`` stats.
+
+    from repro.euler import solve, EulerSolver
+
+    res = solve(graph, n_parts=8).validate()          # one-shot
+    solver = EulerSolver(n_parts=8)                   # serving session
+    for res in solver.solve_many(request_graphs):
+        ...
+
+See DESIGN.md §7 for the API surface and deprecation policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.engine import DistributedEngine, EngineCaps
+from ..core.graph import Graph, partition_graph
+from ..core.host_engine import HostEngine
+from ..core.phase2 import generate_merge_tree
+from ..graphgen.partition import partition_vertices
+from .bucket import ceil_pow2, pad_graph, round_caps, strip_circuit
+from .result import CacheStats, EulerResult
+
+BucketKey = Tuple[int, int, int, EngineCaps]   # (e_cap, n_parts, n_levels, caps)
+
+
+class EulerSolver:
+    """Stable facade over the partition-centric Euler pipeline.
+
+    Parameters
+    ----------
+    n_parts:            partitions (device backend: one per mesh device;
+                        defaults to the mesh size, else ``len(jax.devices())``;
+                        host backend defaults to 4).
+    backend:            ``"device"`` (shard_map BSP engine, default) or
+                        ``"host"`` (exact reference engine).
+    fused:              device execution mode — one scan-fused compiled
+                        program + one host sync (default) vs the eager
+                        per-level oracle.  Overridable per solve call.
+    mesh:               a prebuilt 1-D partition mesh; built lazily from
+                        ``launch.mesh.make_part_mesh(n_parts)`` otherwise.
+    remote_dedup /
+    deferred_transfer:  the paper's §5 heuristics (default on).
+    slack:              capacity sizing headroom passed to ``size_caps``.
+    partition_seed:     seed for the built-in BFS partitioner.
+    min_bucket_edges:   smallest edge bucket (keeps tiny graphs from
+                        fragmenting the cache).
+    """
+
+    def __init__(
+        self,
+        n_parts: Optional[int] = None,
+        backend: str = "device",
+        fused: bool = True,
+        mesh=None,
+        remote_dedup: bool = True,
+        deferred_transfer: bool = True,
+        slack: float = 1.3,
+        partition_seed: int = 0,
+        min_bucket_edges: int = 64,
+    ):
+        assert backend in ("device", "host"), backend
+        self.backend = backend
+        self.fused = fused
+        self.remote_dedup = remote_dedup
+        self.deferred_transfer = deferred_transfer
+        self.slack = slack
+        self.partition_seed = partition_seed
+        self.min_bucket_edges = min_bucket_edges
+        self._mesh = mesh
+        if n_parts is None:
+            if mesh is not None:
+                n_parts = int(np.prod(list(mesh.shape.values())))
+            elif backend == "device":
+                import jax
+
+                n_parts = len(jax.devices())
+            else:
+                n_parts = 4
+        self.n_parts = int(n_parts)
+        # bucket → engine (+ its compiled programs).  Bounded FIFO so a
+        # long-running session over heterogeneous request shapes cannot
+        # grow host memory without bound; evicting a bucket just costs a
+        # recompile if that shape comes back.
+        self._engines: dict = {}
+        self._engines_max = 16
+        # per-graph prep memo (partition/pad/plan/caps): repeat solves of
+        # the same Graph object — the serving pool pattern — skip straight
+        # to the compiled program.  Bounded FIFO; identity-keyed with the
+        # graph kept alive by the entry so ids can't be recycled.
+        self._prep_cache: dict = {}
+        self._prep_cache_max = 64
+        self.cache_stats = CacheStats()
+
+    # ------------------------------------------------------------------
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from ..launch.mesh import make_part_mesh
+
+            self._mesh = make_part_mesh(self.n_parts)
+        return self._mesh
+
+    def _partition(self, graph: Graph,
+                   part_of_vertex: Optional[np.ndarray]) -> np.ndarray:
+        if part_of_vertex is not None:
+            return np.asarray(part_of_vertex, dtype=np.int64)
+        if graph.num_vertices < self.n_parts:
+            raise ValueError(
+                f"graph has {graph.num_vertices} vertices, fewer than "
+                f"n_parts={self.n_parts}; construct the solver with fewer "
+                f"partitions (n_parts ≤ |V|)"
+            )
+        if self.n_parts == 1:
+            return np.zeros(graph.num_vertices, dtype=np.int64)
+        return partition_vertices(graph, self.n_parts,
+                                  seed=self.partition_seed)
+
+    def _prepare(self, graph: Graph, part_of_vertex: Optional[np.ndarray]):
+        """Partition, pad into the bucket, plan the merge tree, size caps.
+        Returns (padded pg, tree, bucket key).  Memoized per Graph object
+        (default partitioning only) so repeat solves of a pooled request
+        graph skip the host-side prep entirely."""
+        memo = part_of_vertex is None
+        if memo:
+            hit = self._prep_cache.get(id(graph))
+            if hit is not None and hit[0] is graph:
+                return hit[1]
+        part = self._partition(graph, part_of_vertex)
+        e_cap = ceil_pow2(graph.num_edges, self.min_bucket_edges)
+        g_pad, part_pad = pad_graph(graph, part, e_cap)
+        pg = partition_graph(g_pad, part_pad)
+        assert pg.num_parts == self.n_parts, (pg.num_parts, self.n_parts)
+        tree = generate_merge_tree(pg.meta)
+        n_levels = tree.height + 1
+        caps = round_caps(DistributedEngine.size_caps(pg, slack=self.slack))
+        key: BucketKey = (e_cap, self.n_parts, n_levels, caps)
+        out = (pg, tree, key)
+        if memo:
+            if len(self._prep_cache) >= self._prep_cache_max:
+                self._prep_cache.pop(next(iter(self._prep_cache)))
+            self._prep_cache[id(graph)] = (graph, out)
+        return out
+
+    def bucket_of(self, graph: Graph,
+                  part_of_vertex: Optional[np.ndarray] = None) -> BucketKey:
+        """The shape-bucket key ``(e_cap, n_parts, n_levels, caps)`` this
+        graph would solve under — graphs sharing a key share one compiled
+        program."""
+        _, _, key = self._prepare(graph, part_of_vertex)
+        return key
+
+    def _on_trace(self):
+        self.cache_stats.traces += 1
+
+    # ------------------------------------------------------------------
+    def solve(self, graph: Graph,
+              part_of_vertex: Optional[np.ndarray] = None,
+              fused: Optional[bool] = None) -> EulerResult:
+        """Find an Euler circuit of ``graph``; returns :class:`EulerResult`.
+
+        ``part_of_vertex`` overrides the built-in partitioner (e.g. for
+        external partitioners or benchmark sweeps); ``fused`` overrides
+        the session's device execution mode for this call.
+        """
+        t0 = time.perf_counter()
+        if self.backend == "host":
+            if fused is not None:
+                raise ValueError(
+                    "fused= is a device-backend execution mode; the host "
+                    "backend has no fused/eager distinction"
+                )
+            return self._solve_host(graph, part_of_vertex, t0)
+        fused = self.fused if fused is None else fused
+        pg, tree, key = self._prepare(graph, part_of_vertex)
+        t_prep = time.perf_counter() - t0
+
+        eng = self._engines.get(key)
+        hit = eng is not None
+        if eng is None:
+            e_cap, n_parts, n_levels, caps = key
+            eng = DistributedEngine(
+                self.mesh, tuple(self.mesh.axis_names), caps, n_levels,
+                remote_dedup=self.remote_dedup,
+                deferred_transfer=self.deferred_transfer,
+                on_trace=self._on_trace,
+            )
+            if len(self._engines) >= self._engines_max:
+                self._engines.pop(next(iter(self._engines)))
+            self._engines[key] = eng
+            self.cache_stats.misses += 1
+        else:
+            self.cache_stats.hits += 1
+
+        res = eng._run(pg, fused=fused)
+        res.graph = graph
+        res.padded_edges = key[0] - graph.num_edges
+        res.circuit = strip_circuit(res.circuit, graph.num_edges)
+        res.cache = dataclasses.replace(self.cache_stats, bucket=key, hit=hit)
+        res.timings["prepare_s"] = t_prep
+        res.timings["total_s"] = time.perf_counter() - t0
+        return res
+
+    def solve_many(self, graphs: Iterable[Graph],
+                   fused: Optional[bool] = None) -> List[EulerResult]:
+        """Solve a stream of graphs through the persistent session; every
+        same-bucket graph after the first reuses the compiled program."""
+        return [self.solve(g, fused=fused) for g in graphs]
+
+    # ------------------------------------------------------------------
+    def _solve_host(self, graph: Graph,
+                    part_of_vertex: Optional[np.ndarray],
+                    t0: float) -> EulerResult:
+        part = self._partition(graph, part_of_vertex)
+        pg = partition_graph(graph, part)
+        eng = HostEngine(pg, remote_dedup=self.remote_dedup,
+                         deferred_transfer=self.deferred_transfer)
+        res = eng._run()
+        res.timings["total_s"] = time.perf_counter() - t0
+        return res
+
+
+# ---------------------------------------------------------------------------
+# module-level one-shot entry points
+# ---------------------------------------------------------------------------
+
+def solve(graph: Graph, part_of_vertex: Optional[np.ndarray] = None,
+          **opts) -> EulerResult:
+    """One-shot ``EulerSolver(**opts).solve(graph)``."""
+    return EulerSolver(**opts).solve(graph, part_of_vertex=part_of_vertex)
+
+
+def solve_many(graphs: Iterable[Graph], **opts) -> List[EulerResult]:
+    """One-shot session over a stream of graphs (shared program cache)."""
+    return EulerSolver(**opts).solve_many(graphs)

@@ -51,6 +51,11 @@ def fits_resident_vmem(n: int, n_tables: int, itemsize: int = 4) -> bool:
 
 
 def _pick_block(n: int, block: int) -> int:
+    # Keep the grid ≥ 2: a single full-table block (block == n) tickles a
+    # pathological XLA:CPU compile of the interpret-mode lowering (minutes
+    # at n == 1024 vs seconds at n/2 blocks); the output is block-
+    # independent, so shrinking is always safe.
+    block = min(block, max(1, n // 2))
     while n % block:
         block //= 2
     return max(1, block)

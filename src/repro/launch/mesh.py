@@ -29,8 +29,24 @@ def make_test_mesh(n_devices: int = 0, tp: int = 1):
 
 
 def make_part_mesh(n_parts: int, axis: str = "part"):
-    """1-D partition mesh for the Euler engine (one partition per device)."""
-    return make_mesh((n_parts,), (axis,))
+    """1-D partition mesh for the Euler engine (one partition per device).
+
+    Uses the first ``n_parts`` devices when fewer partitions than devices
+    are requested (e.g. a 2-partition solve on an 8-device host), so the
+    solver facade can pick ``n_parts`` independently of the host shape."""
+    devs = jax.devices()
+    if n_parts == len(devs):
+        return make_mesh((n_parts,), (axis,))
+    if n_parts > len(devs):
+        raise ValueError(
+            f"{n_parts} partitions need {n_parts} devices but only "
+            f"{len(devs)} are visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_parts} (CPU) or "
+            f"lower n_parts"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devs[:n_parts]), (axis,))
 
 
 def flat_axes(mesh) -> Tuple[str, ...]:

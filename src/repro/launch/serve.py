@@ -1,17 +1,101 @@
-"""Batched serving driver: prefill + decode with a KV cache.
+"""Request-serving drivers.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-        --batch 4 --prompt-len 64 --gen 32
+Default workload — the paper's own architecture behind the public facade:
+a request loop feeding a stream of generated graphs through ONE persistent
+:class:`repro.euler.EulerSolver` session.  Each request graph is padded
+into a geometric shape bucket; after the first solve in a bucket, every
+later request reuses the compiled fused scan with zero retrace (DESIGN.md
+§7), so steady-state throughput is pure execution.  Reports circuits/s and
+the session's compile-cache stats.
 
-Serves the reduced config on CPU (the full configs serve identically on a
-pod via the decode cells proven by the dry-run)."""
+    PYTHONPATH=src python -m repro.launch.serve --scale 9 --parts 8 \
+        --duration 30
+
+The original LM prefill+decode driver is kept behind ``--workload lm``
+(:func:`main_lm`):
+
+    PYTHONPATH=src python -m repro.launch.serve --workload lm \
+        --arch smollm-360m --batch 4 --prompt-len 64 --gen 32
+"""
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 
-def main(argv=None):
+def main_euler(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Euler-circuit serving loop over the solver facade")
+    ap.add_argument("--scale", type=int, default=9,
+                    help="RMAT scale of the request graphs")
+    ap.add_argument("--avg-degree", type=int, default=5)
+    ap.add_argument("--parts", type=int, default=0,
+                    help="partitions (0 → one per visible device)")
+    ap.add_argument("--pool", type=int, default=6,
+                    help="distinct graphs cycled through the request stream")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve exactly N requests (0 → duration-driven)")
+    ap.add_argument("--duration", type=float, default=10.0,
+                    help="serve for this many seconds after warmup")
+    ap.add_argument("--eager", action="store_true",
+                    help="per-level eager supersteps instead of the fused scan")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from ..euler import EulerSolver
+    from ..graphgen.eulerize import eulerian_rmat
+
+    n_parts = args.parts or len(jax.devices())
+    solver = EulerSolver(n_parts=n_parts, fused=not args.eager)
+    pool = [eulerian_rmat(args.scale, avg_degree=args.avg_degree,
+                          seed=args.seed + i) for i in range(args.pool)]
+    mode = "eager" if args.eager else "fused"
+    print(f"serving {mode} on {n_parts} partitions; request pool: "
+          f"{len(pool)} graphs, ~{pool[0].num_edges} edges each")
+
+    # Warmup: one pass over the pool compiles each bucket once; everything
+    # after is steady-state serving.
+    t0 = time.perf_counter()
+    warm = solver.solve_many(pool)
+    warm[0].validate()
+    t_warm = time.perf_counter() - t0
+    cs = solver.cache_stats
+    print(f"warmup: {len(pool)} solves in {t_warm:.2f}s — "
+          f"{cs.misses} bucket(s), {cs.compiles} program compile(s)")
+
+    served = 0
+    edges = 0
+    t0 = time.perf_counter()
+    while True:
+        elapsed = time.perf_counter() - t0
+        if args.requests and served >= args.requests:
+            break
+        if not args.requests and elapsed >= args.duration:
+            break
+        res = solver.solve(pool[served % len(pool)])
+        assert res.cache.hit, "steady-state request missed the program cache"
+        served += 1
+        edges += len(res.circuit)
+    elapsed = time.perf_counter() - t0
+
+    cs = solver.cache_stats
+    thr = served / max(elapsed, 1e-9)
+    print(f"served {served} circuits ({edges} edges) in {elapsed:.2f}s "
+          f"→ {thr:.2f} circuits/s, {edges / max(elapsed, 1e-9):.0f} edges/s")
+    print(f"cache: {cs.hits} hits / {cs.misses} misses / "
+          f"{cs.compiles} compiles over the session")
+    assert served > 0, "serving loop made no progress"
+    res.validate()
+    return thr
+
+
+def main_lm(argv=None):
+    """Batched LM serving: prefill + decode with a KV cache (CPU-reduced;
+    the full configs serve identically on a pod via the decode cells
+    proven by the dry-run)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--batch", type=int, default=4)
@@ -67,6 +151,15 @@ def main(argv=None):
     print("generated ids (first seq):", gen[0][:16])
     assert gen.shape == (args.batch, args.gen)
     return gen
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--workload", choices=("euler", "lm"), default="euler",
+                    help="request-serving workload (default: euler)")
+    args, rest = ap.parse_known_args(argv)
+    return main_lm(rest) if args.workload == "lm" else main_euler(rest)
 
 
 if __name__ == "__main__":

@@ -403,7 +403,9 @@ def build_recsys_cell(arch: ArchConfig, cell: ShapeCell, mesh) -> Cell:
 # ---------------------------------------------------------------------------
 
 def build_euler_cell(arch: ArchConfig, cell: ShapeCell, mesh) -> Cell:
-    from ..core.engine import DistributedEngine, EngineState, FusedOut, StepOut
+    # engine types come through the public facade (DESIGN.md §7); the AOT
+    # cells are the one sanctioned use of the engine below the solver
+    from ..euler import DistributedEngine, EngineState, FusedOut, StepOut
 
     ecfg = arch.model
     axes = tuple(mesh.axis_names)

@@ -149,22 +149,14 @@ def test_autoint_smoke():
 
 
 def test_euler_smoke():
-    """Reduced Euler config: distributed engine on the 1-device mesh."""
-    from repro.core.engine import DistributedEngine
-    from repro.core.graph import partition_graph
-    from repro.core.phase2 import generate_merge_tree
+    """Facade solve: distributed engine on the 1-device mesh."""
+    from repro.euler import solve
     from repro.graphgen.eulerize import eulerian_rmat
-    from repro.graphgen.partition import partition_vertices
-
-    from repro.launch.mesh import make_part_mesh
 
     g = eulerian_rmat(6, avg_degree=4, seed=0)
-    pg = partition_graph(g, np.zeros(g.num_vertices, dtype=np.int64))
-    mesh = make_part_mesh(1)
-    caps = DistributedEngine.size_caps(pg)
-    eng = DistributedEngine(mesh, ("part",), caps, n_levels=1)
-    circuit, metrics = eng.run(pg, validate=True)
-    assert len(circuit) == g.num_edges
+    res = solve(g, n_parts=1).validate()
+    assert len(res.circuit) == g.num_edges
+    assert res.backend == "device" and res.valid
 
 
 def test_all_registered_configs_load():

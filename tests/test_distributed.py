@@ -1,45 +1,19 @@
 """Distributed paths: run in a subprocess with 8 fake CPU devices (the
 main test process must keep the default single device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_with_devices(code: str, n: int = 8, timeout: int = 900) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env,
-                       timeout=timeout)
-    assert r.returncode == 0, r.stdout + r.stderr
-    return r.stdout
+from conftest import run_with_devices
 
 
 def test_distributed_euler_engine_8_devices():
     out = run_with_devices("""
         import numpy as np, jax
-        from repro.core.graph import partition_graph
-        from repro.core.engine import DistributedEngine
-        from repro.core.phase2 import generate_merge_tree
+        from repro.euler import EulerSolver
         from repro.graphgen.eulerize import eulerian_rmat
-        from repro.graphgen.partition import partition_vertices
-        from repro.launch.mesh import make_part_mesh
 
         g = eulerian_rmat(9, avg_degree=5, seed=3)
-        pg = partition_graph(g, partition_vertices(g, 8, seed=3))
-        mesh = make_part_mesh(8)
-        caps = DistributedEngine.size_caps(pg)
-        tree = generate_merge_tree(pg.meta)
-        eng = DistributedEngine(mesh, ("part",), caps,
-                                n_levels=tree.height + 1)
-        circuit, metrics = eng.run(pg, validate=True)
-        print("CIRCUIT_OK", len(circuit), g.num_edges)
+        res = EulerSolver(n_parts=8, partition_seed=3).solve(g).validate()
+        assert len(res.circuit) == g.num_edges
+        assert res.backend == "device" and res.fused
+        print("CIRCUIT_OK", len(res.circuit), g.num_edges)
     """)
     assert "CIRCUIT_OK" in out
 
@@ -50,27 +24,24 @@ def test_fused_matches_eager_byte_identical():
     byte-identical circuits and metrics to the per-level eager oracle."""
     out = run_with_devices("""
         import numpy as np, jax
-        from repro.core.graph import partition_graph
-        from repro.core.engine import DistributedEngine
-        from repro.core.phase2 import generate_merge_tree
+        from repro.euler import EulerSolver
         from repro.graphgen.eulerize import eulerian_rmat
-        from repro.graphgen.partition import partition_vertices
-        from repro.launch.mesh import make_part_mesh
 
         for seed in (3, 7):
             g = eulerian_rmat(9, avg_degree=5, seed=seed)
-            pg = partition_graph(g, partition_vertices(g, 8, seed=seed))
-            mesh = make_part_mesh(8)
-            tree = generate_merge_tree(pg.meta)
-            eng = DistributedEngine(mesh, ("part",),
-                                    DistributedEngine.size_caps(pg),
-                                    n_levels=tree.height + 1)
-            c_f, m_f = eng.run(pg, validate=True, fused=True)
-            c_e, m_e = eng.run(pg, validate=True, fused=False)
-            assert (c_f == c_e).all(), "circuits differ"
-            assert len(m_f) == len(m_e)
-            for a, b in zip(m_f, m_e):
-                assert (np.asarray(a) == np.asarray(b)).all()
+            solver = EulerSolver(n_parts=8, partition_seed=seed)
+            r_f = solver.solve(g, fused=True).validate()
+            r_e = solver.solve(g, fused=False).validate()
+            assert (r_f.circuit == r_e.circuit).all(), "circuits differ"
+            assert len(r_f.levels) == len(r_e.levels)
+            # normalized per-level LevelStats agree partition by partition
+            for a, b in zip(r_f.levels, r_e.levels):
+                assert a.cumulative == b.cumulative
+                for sa, sb in zip(a.states, b.states):
+                    assert (sa.remote_copies, sa.open_stubs, sa.touch,
+                            sa.components) == (sb.remote_copies,
+                                               sb.open_stubs, sb.touch,
+                                               sb.components)
         print("FUSED_EAGER_IDENTICAL_OK")
     """)
     assert "FUSED_EAGER_IDENTICAL_OK" in out
@@ -81,21 +52,12 @@ def test_fused_single_host_sync():
     run() — no per-level np.asarray of logs."""
     out = run_with_devices("""
         import numpy as np, jax
-        from repro.core.graph import partition_graph
         from repro.core import engine as eng_mod
-        from repro.core.engine import DistributedEngine
-        from repro.core.phase2 import generate_merge_tree
+        from repro.euler import EulerSolver
         from repro.graphgen.eulerize import eulerian_rmat
-        from repro.graphgen.partition import partition_vertices
-        from repro.launch.mesh import make_part_mesh
 
         g = eulerian_rmat(8, avg_degree=5, seed=2)
-        pg = partition_graph(g, partition_vertices(g, 8, seed=2))
-        mesh = make_part_mesh(8)
-        tree = generate_merge_tree(pg.meta)
-        eng = DistributedEngine(mesh, ("part",),
-                                DistributedEngine.size_caps(pg),
-                                n_levels=tree.height + 1)
+        solver = EulerSolver(n_parts=8, partition_seed=2)
         fetches = []
         implicit = []
 
@@ -124,7 +86,7 @@ def test_fused_single_host_sync():
         real_jax, real_np = eng_mod.jax, eng_mod.np
         eng_mod.jax, eng_mod.np = JaxProxy(), NpProxy()
         try:
-            eng.run(pg, validate=True, fused=True)
+            solver.solve(g, fused=True).validate()
         finally:
             eng_mod.jax, eng_mod.np = real_jax, real_np
         assert sum(fetches) == 1, f"expected 1 host sync, saw {sum(fetches)}"
@@ -139,21 +101,12 @@ def test_distributed_euler_matches_host_metrics():
     curve as the host engine (§5-on: active state bounded)."""
     out = run_with_devices("""
         import numpy as np, jax
-        from repro.core.graph import partition_graph
-        from repro.core.engine import DistributedEngine
-        from repro.core.phase2 import generate_merge_tree
+        from repro.euler import EulerSolver
         from repro.graphgen.eulerize import eulerian_rmat
-        from repro.graphgen.partition import partition_vertices
-        from repro.launch.mesh import make_part_mesh
 
         g = eulerian_rmat(10, avg_degree=5, seed=1)
-        pg = partition_graph(g, partition_vertices(g, 8, seed=1))
-        mesh = make_part_mesh(8)
-        eng = DistributedEngine(mesh, ("part",),
-                                DistributedEngine.size_caps(pg),
-                                n_levels=generate_merge_tree(pg.meta).height + 1)
-        circuit, metrics = eng.run(pg, validate=True)
-        cum = [int(m.sum()) for m in metrics]
+        res = EulerSolver(n_parts=8, partition_seed=1).solve(g).validate()
+        cum = [ls.cumulative for ls in res.levels]
         print("CUM", cum)
         assert cum[-1] == 0 or cum[-1] <= cum[0] * 2
     """)

@@ -1,0 +1,237 @@
+"""Public `repro.euler` facade: unified result type, deprecation shims,
+shape-bucketed compile caching, and host/device backend parity."""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.core.graph import partition_graph
+from repro.core.memory import LevelStats
+from repro.euler import (EulerResult, EulerSolver, ceil_pow2, pad_graph,
+                         round_caps, solve, strip_circuit)
+from repro.graphgen.eulerize import eulerian_rmat
+
+
+# ---------------------------------------------------------------------------
+# unified result type + validate()
+# ---------------------------------------------------------------------------
+
+def test_host_solve_returns_unified_result():
+    g = eulerian_rmat(7, avg_degree=4, seed=0)
+    res = solve(g, backend="host", n_parts=4)
+    assert isinstance(res, EulerResult)
+    assert res.backend == "host" and res.graph is g
+    assert res.valid is None
+    assert res.validate() is res and res.valid is True
+    assert all(isinstance(ls, LevelStats) for ls in res.levels)
+    assert res.supersteps == res.tree.height + 1
+    assert "total_s" in res.timings
+
+
+def test_validate_rejects_bad_circuit():
+    g = eulerian_rmat(7, avg_degree=4, seed=1)
+    res = solve(g, backend="host", n_parts=2)
+    res.circuit = res.circuit[::-1].copy()  # break the walk order
+    with pytest.raises(AssertionError):
+        res.validate()
+    assert res.valid is False
+
+
+def test_device_solve_unifies_result_and_metrics():
+    """1-device mesh in-process: device backend returns the same result
+    type as host, with normalized per-level LevelStats."""
+    g = eulerian_rmat(6, avg_degree=4, seed=2)
+    res = solve(g, n_parts=1).validate()
+    assert isinstance(res, EulerResult)
+    assert res.backend == "device" and res.fused
+    assert all(isinstance(ls, LevelStats) for ls in res.levels)
+    assert len(res.levels) == res.supersteps
+    # metrics round-trip through the normalized form
+    raw = res.metrics_arrays()
+    again = EulerResult.levels_from_metrics(raw)
+    assert [ls.cumulative for ls in again] == \
+        [ls.cumulative for ls in res.levels]
+    # padding is stripped from the public circuit
+    assert res.padded_edges > 0
+    assert len(res.circuit) == g.num_edges
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims at the old import paths
+# ---------------------------------------------------------------------------
+
+def test_old_result_import_path():
+    from repro.core.host_engine import EulerResult as OldResult
+
+    assert OldResult is EulerResult
+
+
+def test_host_engine_run_deprecated_shim():
+    from repro.core.host_engine import HostEngine
+    from repro.graphgen.partition import partition_vertices
+
+    g = eulerian_rmat(7, avg_degree=4, seed=3)
+    pg = partition_graph(g, partition_vertices(g, 2, seed=0))
+    with pytest.warns(DeprecationWarning):
+        res = HostEngine(pg).run(validate=True)
+    assert isinstance(res, EulerResult) and res.valid
+
+
+def test_distributed_engine_run_deprecated_shim():
+    from repro.core.engine import DistributedEngine
+    from repro.core.phase2 import generate_merge_tree
+    from repro.launch.mesh import make_part_mesh
+
+    g = eulerian_rmat(6, avg_degree=4, seed=4)
+    pg = partition_graph(g, np.zeros(g.num_vertices, dtype=np.int64))
+    eng = DistributedEngine(make_part_mesh(1), ("part",),
+                            DistributedEngine.size_caps(pg), n_levels=1)
+    with pytest.warns(DeprecationWarning):
+        circuit, metrics = eng.run(pg, validate=True)
+    assert len(circuit) == g.num_edges
+    assert len(metrics) == 1 and metrics[0].shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# shape buckets: padding, rounding, stripping
+# ---------------------------------------------------------------------------
+
+def test_ceil_pow2():
+    assert [ceil_pow2(x) for x in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert ceil_pow2(3, lo=64) == 64
+
+
+def test_round_caps_pow2_and_idempotent():
+    from repro.core.engine import EngineCaps
+
+    caps = EngineCaps(edge_cap=100, park_cap=33, ship_cap=17, new_cap=130,
+                      open_cap=48, touch_cap=96, open_ship_cap=48,
+                      touch_ship_cap=96)
+    r = round_caps(caps)
+    for f in ("edge_cap", "park_cap", "ship_cap", "new_cap", "open_cap",
+              "touch_cap", "open_ship_cap", "touch_ship_cap"):
+        v = getattr(r, f)
+        assert v >= getattr(caps, f) and v & (v - 1) == 0, (f, v)
+    assert r.mate_ship_cap == 0           # zero lane override stays zero
+    assert round_caps(r) == r
+
+
+@pytest.mark.parametrize("e_cap_extra", [0, 1, 2, 7])
+def test_pad_graph_keeps_eulerian_and_strips_clean(e_cap_extra):
+    """Padded graphs stay Eulerian/connected, and stripping the dummy
+    arrivals from any Euler circuit of the padded graph leaves a valid
+    circuit of the original."""
+    from repro.core.hierholzer import hierholzer_circuit, validate_circuit
+
+    g = eulerian_rmat(6, avg_degree=4, seed=5)
+    part = np.zeros(g.num_vertices, dtype=np.int64)
+    e_cap = g.num_edges + e_cap_extra
+    g2, part2 = pad_graph(g, part, e_cap)
+    assert g2.num_edges == e_cap
+    assert g2.is_eulerian()
+    assert len(part2) == g2.num_vertices
+    circ2 = hierholzer_circuit(g2)
+    validate_circuit(g2, circ2)
+    validate_circuit(g, strip_circuit(circ2, g.num_edges))
+
+
+def test_bucket_of_is_stable():
+    g = eulerian_rmat(7, avg_degree=4, seed=6)
+    solver = EulerSolver(n_parts=1)
+    k1, k2 = solver.bucket_of(g), solver.bucket_of(g)
+    assert k1 == k2
+    assert k1[0] >= g.num_edges and k1[1] == 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance: solve_many compiles the fused program exactly once per bucket
+# ---------------------------------------------------------------------------
+
+def test_solve_many_single_compile_byte_identical():
+    out = run_with_devices("""
+        import numpy as np
+        from repro.euler import EulerSolver, solve
+        from repro.graphgen.eulerize import eulerian_rmat
+
+        solver = EulerSolver(n_parts=8)
+        buckets = {}
+        for s in range(30):
+            g = eulerian_rmat(8, avg_degree=5, seed=s)
+            buckets.setdefault(solver.bucket_of(g), []).append(g)
+        key, group = max(buckets.items(), key=lambda kv: len(kv[1]))
+        assert len(group) >= 8, f"modal bucket holds {len(group)} < 8 graphs"
+        group = group[:8]
+
+        results = solver.solve_many(group)
+        cs = solver.cache_stats
+        # trace-count probe: ONE lowering serves all 8 same-bucket graphs
+        assert cs.traces == 1, f"fused program traced {cs.traces}x"
+        assert cs.misses == 1 and cs.hits == len(group) - 1
+        assert not results[0].cache.hit and results[-1].cache.hit
+        for g, r in zip(group, results):
+            r.validate()
+            assert len(r.circuit) == g.num_edges
+            assert r.cache.bucket == key
+
+        # one-shot solve() (fresh session) is byte-for-byte identical
+        for i in (0, 3):
+            one = solve(group[i], n_parts=8)
+            assert (one.circuit == results[i].circuit).all(), i
+            assert (one.mate == results[i].mate).all(), i
+        print("BUCKET_CACHE_OK", len(group), cs.traces)
+    """)
+    assert "BUCKET_CACHE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# backend parity: host vs device, including multi-component-pivot cases
+# ---------------------------------------------------------------------------
+
+def test_backend_parity_property():
+    out = run_with_devices("""
+        import numpy as np
+        from repro.core.graph import Graph
+        from repro.euler import EulerSolver
+        from repro.graphgen.eulerize import eulerian_rmat
+
+        def graph_of_cycles(n_vertices, cycles):
+            eu, ev = [], []
+            for cyc in cycles:
+                for i in range(len(cyc)):
+                    eu.append(cyc[i])
+                    ev.append(cyc[(i + 1) % len(cyc)])
+            return Graph(n_vertices, np.array(eu, dtype=np.int64),
+                         np.array(ev, dtype=np.int64))
+
+        # multi-component-pivot graphs: edge-disjoint cycles that only
+        # meet at pivot vertices, so Phase 3's pivot splice must fire
+        pivots = [
+            graph_of_cycles(11, [[0, 1, 2], [0, 3, 4], [0, 5, 6],
+                                 [0, 7, 8], [0, 9, 10]]),
+            graph_of_cycles(10, [[0, 1, 2], [1, 3, 4], [4, 5, 6],
+                                 [6, 7, 8], [8, 9, 0]]),
+        ]
+        cases = [(g, 2) for g in pivots] + [
+            (eulerian_rmat(7, avg_degree=4, seed=s), 8) for s in (0, 1)
+        ]
+        # device side runs the eager per-level mode: it executes the same
+        # superstep body and device Phase 3 as the fused scan (proven
+        # byte-identical in test_fused_matches_eager_byte_identical) but
+        # compiles far smaller programs, keeping this property sweep fast
+        solvers = {}
+        for g, nparts in cases:
+            if nparts not in solvers:
+                solvers[nparts] = (
+                    EulerSolver(n_parts=nparts, backend="device",
+                                fused=False),
+                    EulerSolver(n_parts=nparts, backend="host"),
+                )
+            dev, host = solvers[nparts]
+            r_d = dev.solve(g).validate()
+            r_h = host.solve(g).validate()
+            assert r_d.backend == "device" and r_h.backend == "host"
+            assert sorted(r_d.circuit >> 1) == sorted(r_h.circuit >> 1) \
+                == list(range(g.num_edges))
+        print("PARITY_OK", len(cases))
+    """, timeout=1800)
+    assert "PARITY_OK" in out

@@ -9,12 +9,11 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core.graph import Graph, partition_graph
+from repro.core.graph import Graph
 from repro.core.hierholzer import hierholzer_circuit, validate_circuit
-from repro.core.host_engine import HostEngine
 from repro.core.phase2 import generate_merge_tree, ancestor_at_level
+from repro.euler import solve
 from repro.graphgen.eulerize import eulerize, largest_component
-from repro.graphgen.partition import partition_vertices
 
 
 @st.composite
@@ -42,8 +41,8 @@ def test_host_engine_always_valid(g, nparts):
     if g.num_edges < 4:
         return
     nparts = min(nparts, max(2, g.num_vertices // 4))
-    pg = partition_graph(g, partition_vertices(g, nparts, seed=0))
-    res = HostEngine(pg).run(validate=True)   # validate_circuit inside
+    res = solve(g, backend="host", n_parts=nparts,
+                remote_dedup=False, deferred_transfer=False).validate()
     # every edge appears exactly once
     assert sorted(np.asarray(res.circuit) >> 1) == list(range(g.num_edges))
 
@@ -86,8 +85,8 @@ def test_memory_accounting_monotone_parts(levels, seed):
     ), seed=0)
     if g.num_edges < 8:
         return
-    pg = partition_graph(g, partition_vertices(g, 3, seed=0))
-    res = HostEngine(pg).run(validate=True)
+    res = solve(g, backend="host", n_parts=3,
+                remote_dedup=False, deferred_transfer=False).validate()
     for ls in res.levels:
         assert ls.cumulative >= 0
         for s in ls.states:
