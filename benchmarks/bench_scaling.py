@@ -15,6 +15,17 @@ The serving series measures the headline multi-graph path: ``solve_many``
 over a pool of same-scale request graphs through one solver session —
 the shape-bucket program cache makes every post-warmup solve retrace-free
 — reported as warm circuits/s next to the compile counts.
+
+The batched-serving series sweeps the micro-batch width B over one
+modal-bucket pool: B same-bucket graphs per ``solve_batch`` call run as
+ONE fused device program (DESIGN.md §8), so circuits/s rises with B as
+per-program dispatch, collective-rendezvous, and host-sync overheads
+amortize — the acceptance target is B=8 ≥ 2× B=1 even on the CPU
+interpret-mode mesh.  On a 2-core host the sequential baseline is
+dispatch-noise-limited (observed B=8/B=1 ratios 1.9–2.9× across
+processes, ≈2.0–2.4× typical); beefier hosts amortize more, since the
+batched program's wider ops also gain intra-op parallelism the tiny
+sequential ops cannot use.
 """
 from __future__ import annotations
 
@@ -41,6 +52,10 @@ DEVICE_SERIES = [  # (scale, parts) — ≥2 graph scales, fused vs eager
 
 SERVE_SERIES = [  # (scale, parts, pool size) — warm-solve throughput
     (9, 8, 8), (11, 8, 4),
+]
+
+BATCHED_SERIES = [  # (scale, parts, avg degree, widths) — batched serving
+    (5, 8, 3, (1, 2, 4, 8)),
 ]
 
 
@@ -132,7 +147,65 @@ def run_serving(series=SERVE_SERIES, seed=0):
     return rows
 
 
+def run_batched(series=BATCHED_SERIES, seed=0, reps=5):
+    """Micro-batched serving throughput: warm circuits/s of an 8-graph
+    modal-bucket pool solved in chunks of B through one ``solve_batch``
+    program per chunk, for each batch width B.  One row per (graph
+    scale, B); ``x_vs_B1`` is the headline amortization multiple.
+
+    Timing is the *median* over ``reps`` pool passes, with the widths'
+    passes interleaved in one measurement window: dispatch-heavy
+    sequential (B=1) passes are much noisier than batched passes on an
+    oversubscribed CPU host (thread-placement modes can swing them
+    2–3×), so interleaving samples every width under the same host
+    conditions and the median keeps outlier passes from skewing the
+    ratio either way."""
+    from repro.euler import modal_bucket_pool
+
+    rows = []
+    for scale, parts, deg, widths in series:
+        solver = EulerSolver(n_parts=parts, partition_seed=seed)
+        pool = modal_bucket_pool(
+            solver,
+            (eulerian_rmat(scale, avg_degree=deg, seed=seed + s)
+             for s in range(80)),
+            8,
+        )
+        if len(pool) < 8:
+            continue  # no modal bucket wide enough at this scale
+        key = solver.bucket_of(pool[0])
+        compiles = {}
+        for B in widths:                                   # compile pass
+            before = solver.cache_stats.compiles
+            solver.solve_many(pool, batch=B)[0].validate()
+            compiles[B] = solver.cache_stats.compiles - before
+        times = {B: [] for B in widths}
+        for _ in range(reps):
+            for B in widths:
+                t0 = time.perf_counter()
+                solver.solve_many(pool, batch=B)
+                times[B].append(time.perf_counter() - t0)
+        base = None
+        for B in widths:
+            dt = float(np.median(times[B]))
+            cps = len(pool) / max(dt, 1e-9)
+            base = base or cps
+            rows.append({
+                "graph": f"s{scale}/P{parts}",
+                "E_cap": key[0],
+                "B": B,
+                "warm_s": round(dt, 3),
+                "circuits/s": round(cps, 2),
+                "x_vs_B1": round(cps / base, 2),
+                "compiles": compiles[B],
+            })
+    return rows
+
+
 def _print_table(rows):
+    if not rows:
+        print("  (no rows)")
+        return
     cols = list(rows[0].keys())
     print(" | ".join(f"{c:>12s}" for c in cols))
     for r in rows:
@@ -148,7 +221,11 @@ def main():
     print("\nwarm serving throughput (solve_many, shape-bucket cache):")
     serve_rows = run_serving()
     _print_table(serve_rows)
-    return rows + dev_rows + serve_rows
+    print("\nbatched serving throughput (solve_batch, one program per "
+          "B-chunk):")
+    batched_rows = run_batched()
+    _print_table(batched_rows)
+    return rows + dev_rows + serve_rows + batched_rows
 
 
 if __name__ == "__main__":

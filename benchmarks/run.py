@@ -27,15 +27,18 @@ def main():
 
     if args.quick:
         scaling_series = [(10, 2), (11, 3), (11, 4), (12, 8)]
+        batched_series = [(5, 8, 3, (1, 2, 4, 8))]
         kw = dict(scale=11, parts=8)
     else:
         scaling_series = bench_scaling.SERIES
+        batched_series = bench_scaling.BATCHED_SERIES
         kw = dict(scale=14, parts=8)
 
     suites = {
         "scaling": lambda: bench_scaling.run(series=scaling_series),
         "fused": lambda: bench_scaling.run_device(),
         "serving": lambda: bench_scaling.run_serving(),
+        "batched": lambda: bench_scaling.run_batched(series=batched_series),
         "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
                                            parts=kw["parts"]),
         "phase1": lambda: bench_phase1.run(**kw),
@@ -74,6 +77,10 @@ def _summarize(name, res):
             print(f"  {r['graph']:>10s}: pool={r['pool']} warm "
                   f"{r['circuits/s']} circuits/s "
                   f"({r['compiles']} compiles, {r['hits']} cache hits)")
+    elif name == "batched":
+        for r in res:
+            print(f"  {r['graph']:>10s}: B={r['B']} "
+                  f"{r['circuits/s']} circuits/s ({r['x_vs_B1']}x vs B=1)")
     elif name == "phase1":
         print(f"  fit over {res['points']} points: R2={res['r2']}")
     elif name == "memory":
@@ -81,7 +88,7 @@ def _summarize(name, res):
               f"{res['claims']['level0_cumulative_drop_dedup']*100:.0f}%  "
               f"mid-level avg drop (proposed): "
               f"{res['claims']['mid_level_average_drop_proposed']*100:.0f}% "
-              f"(paper: 43% / 50-75%)")
+              f"(paper: 43% / 50-75%, pass: {res['claims_pass']})")
     elif name == "splits":
         print(f"  build={res['build_s']}s over {len(res['rows'])} "
               f"(partition, level) cells")

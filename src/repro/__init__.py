@@ -1,0 +1,8 @@
+"""Reproduction of *A Partition-centric Distributed Algorithm for
+Identifying Euler Circuits in Large Graphs* (arXiv:1903.06950), grown
+into a jax/pallas serving system.
+
+Public API: :mod:`repro.euler` (see DESIGN.md §7).  A regular package
+root so tools that resolve packages from ``__init__`` files (pytest's
+doctest collection, editors) see ``repro.*`` correctly.
+"""

@@ -68,7 +68,8 @@ def circuit_from_mate_np(mate: np.ndarray, start_stub: int = -1) -> np.ndarray:
 def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray,
                           use_pallas: bool = False,
                           interpret: Optional[bool] = None,
-                          block: int = 1024) -> jnp.ndarray:
+                          block: int = 1024,
+                          batch: int = 1) -> jnp.ndarray:
     """JAX list-ranking twin of :func:`circuit_from_mate_np`.
 
     Returns arrival stubs in walk order, padded with -1 where ``mate`` is
@@ -77,7 +78,10 @@ def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray,
 
     With ``use_pallas`` the doubling rounds run through the Pallas
     ``pointer_double_rank`` kernel (compiled on TPU, interpret elsewhere);
-    both backends produce bit-identical output.
+    both backends produce bit-identical output.  ``batch`` declares how
+    many instances an enclosing ``vmap`` runs (the engine's batched fused
+    program); it only scales the VMEM-residency gate — per-element
+    semantics are unchanged.
     """
     n_stubs = mate.shape[0]
     iota = jnp.arange(n_stubs, dtype=mate.dtype)
@@ -95,7 +99,8 @@ def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray,
     # against HBM.  Interpret mode has no residency constraint.
     pad = (-n_stubs) % block
     if use_pallas and not (resolve_interpret(interpret)
-                           or fits_resident_vmem(n_stubs + pad, 3)):
+                           or fits_resident_vmem(n_stubs + pad, 3,
+                                                 batch=batch)):
         use_pallas = False
     if use_pallas:
         # Pad to a block multiple with self-looping halt slots (dist 0 so
@@ -207,7 +212,7 @@ def splice_components_np(
 
 def _cc_cycle_labels(mate: jnp.ndarray, valid: jnp.ndarray,
                      interpret: Optional[bool] = None,
-                     block: int = 1024) -> jnp.ndarray:
+                     block: int = 1024, batch: int = 1) -> jnp.ndarray:
     """Component labels (min member stub id) of the sibling∘mate cycle
     structure, by pointer-doubling min-label propagation.
 
@@ -230,7 +235,8 @@ def _cc_cycle_labels(mate: jnp.ndarray, valid: jnp.ndarray,
     # Compiled-kernel VMEM gate: the resident-table layout holds 2 [n]
     # tables; whole-graph tables beyond the budget use the bit-identical
     # jnp doubling round instead (interpret mode is unconstrained).
-    use_kernel = resolve_interpret(interpret) or fits_resident_vmem(n + pad, 2)
+    use_kernel = resolve_interpret(interpret) or fits_resident_vmem(
+        n + pad, 2, batch=batch)
     for _ in range(rounds):
         if use_kernel:
             nxt, lab = pointer_double(nxt, lab, block=block,
@@ -248,6 +254,7 @@ def splice_components_jnp(
     rounds: int = 64,
     interpret: Optional[bool] = None,
     block: int = 1024,
+    batch: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Jittable twin of :func:`splice_components_np` for perfect matchings.
 
@@ -269,7 +276,8 @@ def splice_components_jnp(
     iota = jnp.arange(n, dtype=I32)
     mate = mate.astype(I32)
     sv = stub_vertex.astype(I32)
-    lab0 = _cc_cycle_labels(mate, valid, interpret=interpret, block=block)
+    lab0 = _cc_cycle_labels(mate, valid, interpret=interpret, block=block,
+                            batch=batch)
 
     def round_fn(state):
         mate, lab, _, r = state
@@ -335,7 +343,7 @@ def splice_components_jnp(
 def phase3_device(mate: jnp.ndarray, stub_vertex: jnp.ndarray,
                   splice_rounds: int = 64,
                   interpret: Optional[bool] = None,
-                  block: int = 1024):
+                  block: int = 1024, batch: int = 1):
     """Full on-device Phase 3: pivot splice + list-rank emission.
 
     Shared by the fused engine program (where it runs replicated inside the
@@ -343,13 +351,21 @@ def phase3_device(mate: jnp.ndarray, stub_vertex: jnp.ndarray,
     runs on the host-replayed mate), so the two paths produce byte-identical
     circuits whenever their mate arrays agree.
 
+    The batched fused program wraps this whole function in ``jax.vmap``
+    (one call per graph in the batch); ``batch`` is that vmap's static
+    width, threaded down so the Pallas kernels' VMEM-residency gates can
+    account for batched grids (DESIGN.md §8).  It never changes
+    per-element results.
+
     Returns ``(circuit [E], mate', splice_converged)``.
     """
     valid = mate >= 0
     mate2, ok = splice_components_jnp(mate, stub_vertex, valid,
                                       rounds=splice_rounds,
-                                      interpret=interpret, block=block)
+                                      interpret=interpret, block=block,
+                                      batch=batch)
     start = jnp.argmax(valid).astype(I32)
     circuit = circuit_from_mate_jnp(mate2, start, use_pallas=True,
-                                    interpret=interpret, block=block)
+                                    interpret=interpret, block=block,
+                                    batch=batch)
     return circuit, mate2, ok

@@ -1,21 +1,35 @@
 """`repro.euler` — the supported public API for the paper's pipeline.
 
-    from repro.euler import solve, solve_many, EulerSolver, EulerResult
+    from repro.euler import solve, solve_many, solve_batch, EulerSolver
+
+One-shot, session, and batched entry points all return typed
+:class:`EulerResult` values:
+
+>>> import numpy as np
+>>> from repro.core.graph import Graph
+>>> from repro.euler import solve
+>>> g = Graph(4, np.array([0, 1, 2, 3]), np.array([1, 2, 3, 0]))
+>>> len(solve(g, backend="host", n_parts=1).validate().circuit)
+4
 
 Everything else (``core.engine.DistributedEngine``, ``core.host_engine``,
 the phase modules) is internal; the engine classes are re-exported here
 for advanced uses (AOT cells, dry-runs) but their ``run`` entry points
-are deprecated in favour of the solver.  See DESIGN.md §7.
+are deprecated in favour of the solver.  See DESIGN.md §7 (API surface)
+and §8 (batched execution).
 """
 from ..core.engine import (DistributedEngine, EngineCaps, EngineState,
                            FusedOut, StepOut)
 from ..core.host_engine import HostEngine
-from .bucket import ceil_pow2, pad_graph, round_caps, strip_circuit
+from .bucket import (ceil_pow2, modal_bucket_pool, pad_graph, round_caps,
+                     strip_circuit)
 from .result import CacheStats, EulerResult
-from .solver import EulerSolver, solve, solve_many
+from .solver import EulerSolver, solve, solve_batch, solve_many
 
 __all__ = [
-    "solve", "solve_many", "EulerSolver", "EulerResult", "CacheStats",
+    "solve", "solve_many", "solve_batch", "EulerSolver", "EulerResult",
+    "CacheStats",
     "DistributedEngine", "EngineCaps", "EngineState", "FusedOut", "StepOut",
-    "HostEngine", "ceil_pow2", "pad_graph", "round_caps", "strip_circuit",
+    "HostEngine", "ceil_pow2", "modal_bucket_pool", "pad_graph",
+    "round_caps", "strip_circuit",
 ]

@@ -29,7 +29,13 @@ from ..core.graph import Graph
 
 
 def ceil_pow2(x: int, lo: int = 1) -> int:
-    """Smallest power of two ≥ max(x, lo)."""
+    """Smallest power of two ≥ max(x, lo).
+
+    >>> [ceil_pow2(x) for x in (1, 3, 8, 9)]
+    [1, 4, 8, 16]
+    >>> ceil_pow2(3, lo=64)
+    64
+    """
     v = max(int(x), int(lo), 1)
     return 1 << (v - 1).bit_length()
 
@@ -37,7 +43,16 @@ def ceil_pow2(x: int, lo: int = 1) -> int:
 def round_caps(caps: EngineCaps, lo: int = 16) -> EngineCaps:
     """Round every table capacity up to a power of two (geometric bucket).
     Round budgets and flags are kept verbatim; zero lane overrides stay
-    zero (they already default to the rounded table width)."""
+    zero (they already default to the rounded table width).
+
+    >>> caps = EngineCaps(edge_cap=100, park_cap=3, ship_cap=17,
+    ...                   new_cap=130, open_cap=48, touch_cap=96)
+    >>> r = round_caps(caps)
+    >>> r.edge_cap, r.park_cap, r.new_cap
+    (128, 16, 256)
+    >>> round_caps(r) == r                    # idempotent
+    True
+    """
 
     def r(v: int) -> int:
         return ceil_pow2(v, lo) if v else 0
@@ -65,6 +80,13 @@ def pad_graph(graph: Graph, part_of_vertex: np.ndarray,
     all assigned to the anchor's partition — so no cut edges are added and
     the merge tree is untouched.  Returns the padded graph and the padded
     partition assignment.
+
+    >>> import numpy as np
+    >>> from repro.core.graph import Graph
+    >>> tri = Graph(3, np.array([0, 1, 2]), np.array([1, 2, 0]))
+    >>> g2, part2 = pad_graph(tri, np.zeros(3, dtype=np.int64), 8)
+    >>> g2.num_edges, g2.is_eulerian(), len(part2)
+    (8, True, 7)
     """
     E = graph.num_edges
     k = int(e_cap) - E
@@ -95,6 +117,27 @@ def pad_graph(graph: Graph, part_of_vertex: np.ndarray,
     return g2, part2
 
 
+def modal_bucket_pool(solver, graphs, n: int) -> list:
+    """The ≤ ``n`` graphs sharing the most common shape bucket.
+
+    Batched solving (DESIGN.md §8) needs same-bucket graphs; this groups
+    candidates by ``solver.bucket_of`` — skipping graphs too small or
+    sparse for the solver's partition count — and returns the modal
+    bucket's members in input order (may hold fewer than ``n``; empty if
+    no candidate partitions cleanly).  Shared by the serving driver's
+    ``--same-bucket`` pool and the batched benchmark series.
+    """
+    buckets: dict = {}
+    for g in graphs:
+        try:
+            buckets.setdefault(solver.bucket_of(g), []).append(g)
+        except ValueError:
+            continue  # partitioner can't fill n_parts for this graph
+    if not buckets:
+        return []
+    return max(buckets.values(), key=len)[:n]
+
+
 def strip_circuit(circuit: np.ndarray, num_edges: int) -> np.ndarray:
     """Drop the dummy-edge arrivals from a padded-graph circuit.
 
@@ -102,6 +145,10 @@ def strip_circuit(circuit: np.ndarray, num_edges: int) -> np.ndarray:
     its interior vertices have degree 2, so its traversal is one
     contiguous closed sub-walk through the anchor — removing those
     arrivals leaves a valid Euler circuit of the original graph.
+
+    >>> import numpy as np
+    >>> strip_circuit(np.array([0, 2, 4, 7, 9, 5]), 3)  # edges ≥ 3 dummy
+    array([0, 2, 4, 5])
     """
     c = np.asarray(circuit, dtype=np.int64)
     return c[(c >> 1) < num_edges]

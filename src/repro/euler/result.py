@@ -25,14 +25,21 @@ from ..core.phase2 import MergeTree
 class CacheStats:
     """Compiled-program cache accounting of a solver session.
 
-    ``bucket``/``hit`` describe the solve that produced this snapshot;
-    the counters are cumulative over the owning :class:`EulerSolver`.
+    ``bucket``/``hit``/``batch`` describe the solve that produced this
+    snapshot; the counters are cumulative over the owning
+    :class:`EulerSolver`.  Programs are cached per ``(bucket, batch)``:
+    the single-graph program and each batched width compile separately
+    (DESIGN.md §8), and each counts once in ``traces``.
+
+    >>> CacheStats(hits=3, misses=1, traces=1).compiles
+    1
     """
 
     bucket: Optional[Tuple] = None   # shape-bucket key of this solve
     hit: bool = False                # this solve reused a cached program
-    hits: int = 0                    # cumulative bucket-cache hits
-    misses: int = 0                  # cumulative bucket-cache misses
+    batch: int = 1                   # batch width B of this solve's program
+    hits: int = 0                    # cumulative (bucket, B) cache hits
+    misses: int = 0                  # cumulative (bucket, B) cache misses
     traces: int = 0                  # times a whole-run program was traced
 
     @property
@@ -68,7 +75,15 @@ class EulerResult:
 
     def validate(self) -> "EulerResult":
         """Assert ``circuit`` is an Euler circuit of ``graph``; returns
-        self so ``solve(g).validate()`` chains."""
+        self so ``solve(g).validate()`` chains.
+
+        >>> import numpy as np
+        >>> from repro.core.graph import Graph
+        >>> from repro.euler import solve
+        >>> tri = Graph(3, np.array([0, 1, 2]), np.array([1, 2, 0]))
+        >>> solve(tri, backend="host", n_parts=1).validate().valid
+        True
+        """
         from ..core.hierholzer import validate_circuit
 
         assert self.graph is not None, "result carries no graph to validate"

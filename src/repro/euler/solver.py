@@ -9,17 +9,22 @@ selection, backend choice (``device`` — the shard_map BSP engine — or
 A solver instance is a *persistent serving session*: device solves pad
 each request graph into a geometric shape bucket (``bucket.py``) keyed
 into a compiled-program cache, so the second and every later graph in a
-bucket reuses the lowered fused scan with zero retrace.  Cache accounting
-(hits / misses / traces) is reported in every result's ``cache`` stats.
+bucket reuses the lowered fused scan with zero retrace.  Same-bucket
+graphs can additionally be *batched*: ``solve_batch`` stacks B of them
+along a leading batch axis and runs ONE fused device program — one
+dispatch, one host sync — byte-identical to B sequential solves
+(DESIGN.md §8).  Cache accounting (hits / misses / traces, per
+``(bucket, B)`` program) is reported in every result's ``cache`` stats.
 
     from repro.euler import solve, EulerSolver
 
     res = solve(graph, n_parts=8).validate()          # one-shot
     solver = EulerSolver(n_parts=8)                   # serving session
-    for res in solver.solve_many(request_graphs):
+    for res in solver.solve_many(request_graphs, batch=8):
         ...
 
-See DESIGN.md §7 for the API surface and deprecation policy.
+See DESIGN.md §7 for the API surface and deprecation policy, §8 for the
+batched execution model.
 """
 from __future__ import annotations
 
@@ -42,6 +47,20 @@ BucketKey = Tuple[int, int, int, EngineCaps]   # (e_cap, n_parts, n_levels, caps
 
 class EulerSolver:
     """Stable facade over the partition-centric Euler pipeline.
+
+    A small end-to-end session on the exact host reference engine (the
+    device backend is identical API-wise; it pads graphs into compiled
+    shape buckets first):
+
+    >>> import numpy as np
+    >>> from repro.core.graph import Graph
+    >>> from repro.euler import EulerSolver
+    >>> bowtie = Graph(5, np.array([0, 1, 2, 0, 3, 4]),
+    ...                   np.array([1, 2, 0, 3, 4, 0]))
+    >>> solver = EulerSolver(n_parts=1, backend="host")
+    >>> res = solver.solve(bowtie).validate()
+    >>> res.valid, len(res.circuit)
+    (True, 6)
 
     Parameters
     ----------
@@ -100,6 +119,10 @@ class EulerSolver:
         # recompile if that shape comes back.
         self._engines: dict = {}
         self._engines_max = 16
+        # (bucket, B-or-None) program keys already compiled this session;
+        # backs the per-solve hit/miss accounting.  Purged with the
+        # owning engine on eviction.
+        self._programs: set = set()
         # per-graph prep memo (partition/pad/plan/caps): repeat solves of
         # the same Graph object — the serving pool pattern — skip straight
         # to the compiled program.  Bounded FIFO; identity-keyed with the
@@ -146,7 +169,12 @@ class EulerSolver:
         e_cap = ceil_pow2(graph.num_edges, self.min_bucket_edges)
         g_pad, part_pad = pad_graph(graph, part, e_cap)
         pg = partition_graph(g_pad, part_pad)
-        assert pg.num_parts == self.n_parts, (pg.num_parts, self.n_parts)
+        if pg.num_parts != self.n_parts:
+            raise ValueError(
+                f"partitioner produced {pg.num_parts} non-empty parts for "
+                f"n_parts={self.n_parts}; the graph is too small or sparse "
+                f"for this partition count"
+            )
         tree = generate_merge_tree(pg.meta)
         n_levels = tree.height + 1
         caps = round_caps(DistributedEngine.size_caps(pg, slack=self.slack))
@@ -169,6 +197,37 @@ class EulerSolver:
     def _on_trace(self):
         self.cache_stats.traces += 1
 
+    def _engine_for(self, key: BucketKey) -> DistributedEngine:
+        """The (cached) engine owning this bucket's compiled programs."""
+        eng = self._engines.get(key)
+        if eng is None:
+            e_cap, n_parts, n_levels, caps = key
+            eng = DistributedEngine(
+                self.mesh, tuple(self.mesh.axis_names), caps, n_levels,
+                remote_dedup=self.remote_dedup,
+                deferred_transfer=self.deferred_transfer,
+                on_trace=self._on_trace,
+            )
+            if len(self._engines) >= self._engines_max:
+                evicted = next(iter(self._engines))
+                self._engines.pop(evicted)
+                self._programs = {p for p in self._programs
+                                  if p[0] != evicted}
+            self._engines[key] = eng
+        return eng
+
+    def _account(self, key: BucketKey, batch: Optional[int]) -> bool:
+        """Record a solve against the ``(bucket, B)`` program cache;
+        returns whether that program already existed (a cache hit)."""
+        pkey = (key, batch)
+        hit = pkey in self._programs
+        if hit:
+            self.cache_stats.hits += 1
+        else:
+            self.cache_stats.misses += 1
+            self._programs.add(pkey)
+        return hit
+
     # ------------------------------------------------------------------
     def solve(self, graph: Graph,
               part_of_vertex: Optional[np.ndarray] = None,
@@ -178,6 +237,15 @@ class EulerSolver:
         ``part_of_vertex`` overrides the built-in partitioner (e.g. for
         external partitioners or benchmark sweeps); ``fused`` overrides
         the session's device execution mode for this call.
+
+        >>> import numpy as np
+        >>> from repro.core.graph import Graph
+        >>> from repro.euler import solve
+        >>> square = Graph(4, np.array([0, 1, 2, 3]),
+        ...                   np.array([1, 2, 3, 0]))
+        >>> res = solve(square, backend="host", n_parts=1).validate()
+        >>> sorted((res.circuit >> 1).tolist())   # each edge exactly once
+        [0, 1, 2, 3]
         """
         t0 = time.perf_counter()
         if self.backend == "host":
@@ -191,37 +259,114 @@ class EulerSolver:
         pg, tree, key = self._prepare(graph, part_of_vertex)
         t_prep = time.perf_counter() - t0
 
-        eng = self._engines.get(key)
-        hit = eng is not None
-        if eng is None:
-            e_cap, n_parts, n_levels, caps = key
-            eng = DistributedEngine(
-                self.mesh, tuple(self.mesh.axis_names), caps, n_levels,
-                remote_dedup=self.remote_dedup,
-                deferred_transfer=self.deferred_transfer,
-                on_trace=self._on_trace,
-            )
-            if len(self._engines) >= self._engines_max:
-                self._engines.pop(next(iter(self._engines)))
-            self._engines[key] = eng
-            self.cache_stats.misses += 1
-        else:
-            self.cache_stats.hits += 1
-
+        eng = self._engine_for(key)
+        hit = self._account(key, None)
         res = eng._run(pg, fused=fused)
         res.graph = graph
         res.padded_edges = key[0] - graph.num_edges
         res.circuit = strip_circuit(res.circuit, graph.num_edges)
-        res.cache = dataclasses.replace(self.cache_stats, bucket=key, hit=hit)
+        res.cache = dataclasses.replace(self.cache_stats, bucket=key,
+                                        hit=hit, batch=1)
         res.timings["prepare_s"] = t_prep
         res.timings["total_s"] = time.perf_counter() - t0
         return res
 
+    def solve_batch(self, graphs: Iterable[Graph],
+                    fused: Optional[bool] = None) -> List[EulerResult]:
+        """Solve B same-bucket graphs as ONE batched fused device program.
+
+        All graphs must map to the same shape bucket
+        (:meth:`bucket_of`) — same padded edge count, merge-tree height,
+        and rounded caps — so the batch stacks into one static-shape
+        program; mixed buckets raise ``ValueError`` rather than padding
+        everything up to the largest member (DESIGN.md §8 explains the
+        trade).  Results are byte-identical to per-graph :meth:`solve`
+        calls and are returned in input order.
+
+        The batched program is compiled once per ``(bucket, B)`` and
+        cached; a single-element batch delegates to :meth:`solve` (no
+        separate program).  Device backend + fused mode only.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        if self.backend != "device":
+            raise ValueError(
+                "solve_batch is a device-backend path (the host reference "
+                "engine solves one graph at a time); use solve_many"
+            )
+        fused = self.fused if fused is None else fused
+        if not fused:
+            raise ValueError(
+                "solve_batch requires the fused execution mode; the eager "
+                "per-level oracle is single-graph by design"
+            )
+        if len(graphs) == 1:
+            return [self.solve(graphs[0], fused=True)]
+
+        t0 = time.perf_counter()
+        preps = [self._prepare(g, None) for g in graphs]
+        keys = {p[2] for p in preps}
+        if len(keys) > 1:
+            raise ValueError(
+                f"solve_batch needs same-bucket graphs, got {len(keys)} "
+                f"distinct buckets; group with bucket_of() or use "
+                f"solve_many(batch=...)"
+            )
+        key = preps[0][2]
+        t_prep = time.perf_counter() - t0
+        B = len(graphs)
+
+        eng = self._engine_for(key)
+        hit = self._account(key, B)
+        results = eng._run_batch([p[0] for p in preps])
+        total_s = time.perf_counter() - t0
+        for g, res in zip(graphs, results):
+            res.graph = g
+            res.padded_edges = key[0] - g.num_edges
+            res.circuit = strip_circuit(res.circuit, g.num_edges)
+            res.cache = dataclasses.replace(self.cache_stats, bucket=key,
+                                            hit=hit, batch=B)
+            res.timings["prepare_s"] = t_prep
+            res.timings["total_s"] = total_s
+        return results
+
     def solve_many(self, graphs: Iterable[Graph],
-                   fused: Optional[bool] = None) -> List[EulerResult]:
+                   fused: Optional[bool] = None,
+                   batch: Optional[int] = None) -> List[EulerResult]:
         """Solve a stream of graphs through the persistent session; every
-        same-bucket graph after the first reuses the compiled program."""
-        return [self.solve(g, fused=fused) for g in graphs]
+        same-bucket graph after the first reuses the compiled program.
+
+        With ``batch=B > 1`` (device backend, fused mode), graphs are
+        grouped by shape bucket and each group runs through
+        :meth:`solve_batch` in full chunks of B — one program dispatch
+        per chunk instead of one per graph — with results returned in
+        input order, byte-identical to the sequential path.  Leftover
+        chunks smaller than B run per-graph on the warmed single-graph
+        program rather than compiling a one-off ``(bucket, B′)``
+        program (the same policy as the serving micro-batcher,
+        DESIGN.md §8).  The host backend ignores ``batch`` (it has no
+        compiled programs to amortize).
+        """
+        graphs = list(graphs)
+        if batch is None or batch <= 1 or self.backend == "host":
+            return [self.solve(g, fused=fused) for g in graphs]
+        by_bucket: dict = {}
+        for i, g in enumerate(graphs):
+            by_bucket.setdefault(self.bucket_of(g), []).append(i)
+        out: List[Optional[EulerResult]] = [None] * len(graphs)
+        for idxs in by_bucket.values():
+            for j in range(0, len(idxs), batch):
+                chunk = idxs[j:j + batch]
+                if len(chunk) == batch:
+                    solved = self.solve_batch([graphs[i] for i in chunk],
+                                              fused=fused)
+                else:
+                    solved = [self.solve(graphs[i], fused=fused)
+                              for i in chunk]
+                for i, res in zip(chunk, solved):
+                    out[i] = res
+        return out
 
     # ------------------------------------------------------------------
     def _solve_host(self, graph: Graph,
@@ -242,10 +387,27 @@ class EulerSolver:
 
 def solve(graph: Graph, part_of_vertex: Optional[np.ndarray] = None,
           **opts) -> EulerResult:
-    """One-shot ``EulerSolver(**opts).solve(graph)``."""
+    """One-shot ``EulerSolver(**opts).solve(graph)``.
+
+    >>> import numpy as np
+    >>> from repro.core.graph import Graph
+    >>> g = Graph(3, np.array([0, 1, 2]), np.array([1, 2, 0]))
+    >>> solve(g, backend="host", n_parts=1).validate().valid
+    True
+    """
     return EulerSolver(**opts).solve(graph, part_of_vertex=part_of_vertex)
 
 
-def solve_many(graphs: Iterable[Graph], **opts) -> List[EulerResult]:
-    """One-shot session over a stream of graphs (shared program cache)."""
-    return EulerSolver(**opts).solve_many(graphs)
+def solve_many(graphs: Iterable[Graph], batch: Optional[int] = None,
+               **opts) -> List[EulerResult]:
+    """One-shot session over a stream of graphs (shared program cache);
+    ``batch=B`` micro-batches same-bucket graphs through one fused
+    program per chunk (see :meth:`EulerSolver.solve_many`)."""
+    return EulerSolver(**opts).solve_many(graphs, batch=batch)
+
+
+def solve_batch(graphs: Iterable[Graph], **opts) -> List[EulerResult]:
+    """One-shot ``EulerSolver(**opts).solve_batch(graphs)`` — B
+    same-bucket graphs in ONE batched fused device program (DESIGN.md
+    §8)."""
+    return EulerSolver(**opts).solve_batch(graphs)

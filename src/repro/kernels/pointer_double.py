@@ -42,12 +42,20 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
 _VMEM_TABLE_BYTES = 12 * 2**20
 
 
-def fits_resident_vmem(n: int, n_tables: int, itemsize: int = 4) -> bool:
+def fits_resident_vmem(n: int, n_tables: int, itemsize: int = 4,
+                       batch: int = 1) -> bool:
     """Whether ``n_tables`` resident [n] tables fit the kernels' VMEM
     budget.  The compiled TPU path keeps the full jump table(s) on-chip,
     so callers with unbounded tables (e.g. whole-graph Phase 3) must fall
-    back to plain-jnp gathers (HBM-resident, XLA-scheduled) beyond this."""
-    return n * n_tables * itemsize <= _VMEM_TABLE_BYTES
+    back to plain-jnp gathers (HBM-resident, XLA-scheduled) beyond this.
+
+    ``batch`` scales the budget check for vmapped callers (DESIGN.md §8):
+    the batching rule turns the batch axis into a leading grid dimension,
+    and with double-buffered prefetch across grid steps adjacent batch
+    elements' resident tables can overlap in VMEM — so the gate
+    conservatively charges ``min(batch, 2)`` table sets."""
+    return n * n_tables * itemsize * min(max(1, batch), 2) \
+        <= _VMEM_TABLE_BYTES
 
 
 def _pick_block(n: int, block: int) -> int:

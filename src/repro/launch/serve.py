@@ -2,14 +2,18 @@
 
 Default workload — the paper's own architecture behind the public facade:
 a request loop feeding a stream of generated graphs through ONE persistent
-:class:`repro.euler.EulerSolver` session.  Each request graph is padded
-into a geometric shape bucket; after the first solve in a bucket, every
-later request reuses the compiled fused scan with zero retrace (DESIGN.md
-§7), so steady-state throughput is pure execution.  Reports circuits/s and
-the session's compile-cache stats.
+:class:`repro.euler.EulerSolver` session, scheduled by a *micro-batcher*
+(:class:`MicroBatcher`): requests accumulate per shape-bucket key and
+flush through one batched fused program (``solve_batch``, DESIGN.md §8)
+when a bucket reaches ``--max-batch`` or its oldest request has waited
+``--deadline-ms``.  Each request graph is padded into a geometric shape
+bucket; after warmup every flush reuses a compiled ``(bucket, B)``
+program with zero retrace (DESIGN.md §7), so steady-state throughput is
+pure execution.  Reports circuits/s and the session's compile-cache
+stats; ``--max-batch 1`` recovers the PR 2 one-request-at-a-time loop.
 
     PYTHONPATH=src python -m repro.launch.serve --scale 9 --parts 8 \
-        --duration 30
+        --duration 30 --max-batch 8
 
 The original LM prefill+decode driver is kept behind ``--workload lm``
 (:func:`main_lm`):
@@ -20,8 +24,81 @@ The original LM prefill+decode driver is kept behind ``--workload lm``
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+class MicroBatcher:
+    """Bucket-keyed micro-batching scheduler over an ``EulerSolver``.
+
+    ``submit(seq, graph)`` queues one request; completed results flush
+    back as ``(seq, EulerResult)`` pairs whenever the request's bucket
+    fills to ``max_batch``.  ``poll()`` flushes buckets whose oldest
+    request has waited past ``deadline_s`` (so rare shapes are not stuck
+    behind the batch quota), and ``drain()`` flushes everything at
+    shutdown.
+
+    Only two program widths ever run: full-quota flushes execute as ONE
+    batched fused device program (:meth:`EulerSolver.solve_batch` at
+    ``B = max_batch``), while partial deadline/drain flushes fall back
+    to per-graph solves on the warmed single-graph program — compiling a
+    one-off ``(bucket, B′)`` program for a rare leftover width would
+    cost far more than it saves in a synchronous driver (DESIGN.md §8).
+
+    Mixed buckets never share a flush — each bucket queue is
+    independent — so no request is padded up to a foreign shape
+    (DESIGN.md §8).
+    """
+
+    def __init__(self, solver, max_batch: int = 8,
+                 deadline_s: float = 0.010, clock=time.perf_counter):
+        assert max_batch >= 1
+        self.solver = solver
+        self.max_batch = max_batch
+        self.deadline_s = deadline_s
+        self.clock = clock
+        self.pending: dict = {}     # bucket key → [(seq, graph, t_arrival)]
+        self.flushes: list = []     # flush sizes, for reporting
+
+    def _flush(self, key):
+        reqs = self.pending.pop(key, [])
+        if not reqs:
+            return []
+        graphs = [g for _, g, _ in reqs]
+        if len(graphs) == self.max_batch and self.max_batch > 1:
+            results = self.solver.solve_batch(graphs)
+        else:
+            results = [self.solver.solve(g) for g in graphs]
+        self.flushes.append(len(graphs))
+        return [(seq, res) for (seq, _, _), res in zip(reqs, results)]
+
+    def submit(self, seq: int, graph):
+        """Queue one request; returns any results ready because this
+        submission filled its bucket."""
+        key = self.solver.bucket_of(graph)
+        q = self.pending.setdefault(key, [])
+        q.append((seq, graph, self.clock()))
+        if len(q) >= self.max_batch:
+            return self._flush(key)
+        return []
+
+    def poll(self):
+        """Flush every bucket whose oldest request passed the deadline."""
+        now = self.clock()
+        due = [k for k, q in self.pending.items()
+               if q and now - q[0][2] >= self.deadline_s]
+        out = []
+        for k in due:
+            out.extend(self._flush(k))
+        return out
+
+    def drain(self):
+        """Flush all pending requests (shutdown)."""
+        out = []
+        for k in list(self.pending):
+            out.extend(self._flush(k))
+        return out
 
 
 def main_euler(argv=None):
@@ -34,12 +111,25 @@ def main_euler(argv=None):
                     help="partitions (0 → one per visible device)")
     ap.add_argument("--pool", type=int, default=6,
                     help="distinct graphs cycled through the request stream")
+    ap.add_argument("--same-bucket", action="store_true",
+                    help="draw the pool from one modal shape bucket so "
+                         "every flush can fill the batch quota (small "
+                         "graphs otherwise fragment across buckets)")
     ap.add_argument("--requests", type=int, default=0,
                     help="serve exactly N requests (0 → duration-driven)")
     ap.add_argument("--duration", type=float, default=10.0,
                     help="serve for this many seconds after warmup")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="micro-batch flush quota per bucket (1 → "
+                         "unbatched request loop)")
+    ap.add_argument("--deadline-ms", type=float, default=10.0,
+                    help="flush a bucket when its oldest request has "
+                         "waited this long")
     ap.add_argument("--eager", action="store_true",
-                    help="per-level eager supersteps instead of the fused scan")
+                    help="per-level eager supersteps instead of the fused "
+                         "scan (disables micro-batching)")
+    ap.add_argument("--json", default=None,
+                    help="append a JSON line of serving stats to this file")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -49,46 +139,101 @@ def main_euler(argv=None):
     from ..graphgen.eulerize import eulerian_rmat
 
     n_parts = args.parts or len(jax.devices())
+    max_batch = 1 if args.eager else args.max_batch
     solver = EulerSolver(n_parts=n_parts, fused=not args.eager)
-    pool = [eulerian_rmat(args.scale, avg_degree=args.avg_degree,
-                          seed=args.seed + i) for i in range(args.pool)]
+    if args.same_bucket:
+        from ..euler import modal_bucket_pool
+
+        pool = modal_bucket_pool(
+            solver,
+            (eulerian_rmat(args.scale, avg_degree=args.avg_degree,
+                           seed=args.seed + i) for i in range(args.pool * 8)),
+            args.pool,
+        )
+        if not pool:
+            raise SystemExit(
+                "--same-bucket found no graph that partitions into "
+                f"{n_parts} non-empty parts at scale {args.scale}; use a "
+                f"larger --scale or fewer --parts"
+            )
+    else:
+        pool = [eulerian_rmat(args.scale, avg_degree=args.avg_degree,
+                              seed=args.seed + i) for i in range(args.pool)]
     mode = "eager" if args.eager else "fused"
     print(f"serving {mode} on {n_parts} partitions; request pool: "
-          f"{len(pool)} graphs, ~{pool[0].num_edges} edges each")
+          f"{len(pool)} graphs, ~{pool[0].num_edges} edges each; "
+          f"micro-batch ≤{max_batch}, deadline {args.deadline_ms}ms")
 
-    # Warmup: one pass over the pool compiles each bucket once; everything
-    # after is steady-state serving.
+    # Warmup: one sequential pass compiles each bucket's single-graph
+    # program, then one full-width batch per bucket compiles the
+    # (bucket, max_batch) program the steady-state flushes will reuse.
     t0 = time.perf_counter()
     warm = solver.solve_many(pool)
     warm[0].validate()
+    if max_batch > 1:
+        rep = {}
+        for g, r in zip(pool, warm):
+            rep.setdefault(r.cache.bucket, g)
+        for g in rep.values():
+            solver.solve_batch([g] * max_batch)
     t_warm = time.perf_counter() - t0
     cs = solver.cache_stats
-    print(f"warmup: {len(pool)} solves in {t_warm:.2f}s — "
-          f"{cs.misses} bucket(s), {cs.compiles} program compile(s)")
+    print(f"warmup: {t_warm:.2f}s — {len({r.cache.bucket for r in warm})} "
+          f"bucket(s), {cs.compiles} program compile(s)")
 
+    batcher = MicroBatcher(solver, max_batch=max_batch,
+                           deadline_s=args.deadline_ms / 1e3)
     served = 0
     edges = 0
+    submitted = 0
+    last = None
     t0 = time.perf_counter()
     while True:
         elapsed = time.perf_counter() - t0
-        if args.requests and served >= args.requests:
+        # --requests caps *submissions*; the final drain then delivers
+        # exactly N results even when flushes complete out of quota
+        if args.requests and submitted >= args.requests:
             break
         if not args.requests and elapsed >= args.duration:
             break
-        res = solver.solve(pool[served % len(pool)])
-        assert res.cache.hit, "steady-state request missed the program cache"
+        done = batcher.submit(submitted, pool[submitted % len(pool)])
+        submitted += 1
+        done.extend(batcher.poll())
+        for _, res in done:
+            assert res.cache.hit, \
+                "steady-state request missed the program cache"
+            served += 1
+            edges += len(res.circuit)
+            last = res
+    for _, res in batcher.drain():
         served += 1
         edges += len(res.circuit)
+        last = res
     elapsed = time.perf_counter() - t0
 
     cs = solver.cache_stats
     thr = served / max(elapsed, 1e-9)
+    fl = batcher.flushes
     print(f"served {served} circuits ({edges} edges) in {elapsed:.2f}s "
-          f"→ {thr:.2f} circuits/s, {edges / max(elapsed, 1e-9):.0f} edges/s")
+          f"→ {thr:.2f} circuits/s, {edges / max(elapsed, 1e-9):.0f} edges/s "
+          f"({len(fl)} flushes, mean batch "
+          f"{sum(fl) / max(1, len(fl)):.1f})")
     print(f"cache: {cs.hits} hits / {cs.misses} misses / "
           f"{cs.compiles} compiles over the session")
     assert served > 0, "serving loop made no progress"
-    res.validate()
+    last.validate()
+    if args.json:
+        stats = {
+            "workload": "euler-serve", "scale": args.scale,
+            "parts": n_parts, "max_batch": max_batch,
+            "deadline_ms": args.deadline_ms, "served": served,
+            "elapsed_s": round(elapsed, 3),
+            "circuits_per_s": round(thr, 3),
+            "mean_flush": round(sum(fl) / max(1, len(fl)), 2),
+            "compiles": cs.compiles, "hits": cs.hits, "misses": cs.misses,
+        }
+        with open(args.json, "a") as f:
+            f.write(json.dumps(stats) + "\n")
     return thr
 
 

@@ -1,0 +1,198 @@
+"""Batched device solving (DESIGN.md §8): `solve_batch` byte-equality
+with sequential solves, (bucket, B) program-cache accounting, mixed-bucket
+rejection, `solve_many(batch=)` grouping, and the serving micro-batcher."""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.euler import EulerSolver
+from repro.graphgen.eulerize import eulerian_rmat
+from repro.launch.serve import MicroBatcher
+
+
+# ---------------------------------------------------------------------------
+# acceptance: batched == sequential, byte for byte, one compile per (bucket, B)
+# ---------------------------------------------------------------------------
+
+def test_solve_batch_byte_identical_one_compile_per_width():
+    out = run_with_devices("""
+        import numpy as np
+        from repro.euler import EulerSolver
+        from repro.graphgen.eulerize import eulerian_rmat
+
+        solver = EulerSolver(n_parts=8)
+        buckets = {}
+        for s in range(60):
+            g = eulerian_rmat(5, avg_degree=5, seed=s)
+            buckets.setdefault(solver.bucket_of(g), []).append(g)
+        key, group = max(buckets.items(), key=lambda kv: len(kv[1]))
+        assert len(group) >= 8, f"modal bucket holds {len(group)} < 8 graphs"
+        group = group[:8]
+
+        seq = [solver.solve(g) for g in group]
+        cs = solver.cache_stats
+        assert cs.traces == 1, f"single-graph program traced {cs.traces}x"
+
+        # B = 1 delegates to the single-graph program: no new trace
+        one = solver.solve_batch(group[:1])
+        assert len(one) == 1 and cs.traces == 1
+        assert (one[0].circuit == seq[0].circuit).all()
+
+        # B = 3 and B = 8 each compile exactly once, then hit
+        for B, expect_traces in ((3, 2), (8, 3)):
+            first = solver.solve_batch(group[:B])
+            assert cs.traces == expect_traces, (B, cs.traces)
+            assert not first[0].cache.hit and first[0].cache.batch == B
+            again = solver.solve_batch(group[:B])
+            assert cs.traces == expect_traces, f"(bucket, {B}) retraced"
+            assert again[0].cache.hit
+            for s, a, b in zip(seq, first, again):
+                assert (s.circuit == a.circuit).all()
+                assert (s.mate == a.mate).all()
+                assert (a.circuit == b.circuit).all()
+            for g, r in zip(group, first):
+                r.validate()
+                assert len(r.circuit) == g.num_edges
+                assert r.cache.bucket == key
+        print("BATCH_BYTE_EQUAL_OK", cs.traces)
+    """, timeout=1800)
+    assert "BATCH_BYTE_EQUAL_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# argument validation (host-side only: no programs compiled)
+# ---------------------------------------------------------------------------
+
+def test_solve_batch_rejects_mixed_buckets():
+    solver = EulerSolver(n_parts=1)
+    small = eulerian_rmat(5, avg_degree=4, seed=0)
+    big = eulerian_rmat(9, avg_degree=5, seed=1)
+    assert solver.bucket_of(small) != solver.bucket_of(big)
+    with pytest.raises(ValueError, match="same-bucket"):
+        solver.solve_batch([small, big])
+
+
+def test_solve_batch_rejects_host_backend_and_eager():
+    g = eulerian_rmat(5, avg_degree=4, seed=0)
+    with pytest.raises(ValueError, match="device"):
+        EulerSolver(n_parts=1, backend="host").solve_batch([g, g])
+    with pytest.raises(ValueError, match="fused"):
+        EulerSolver(n_parts=1, fused=False).solve_batch([g, g])
+    assert EulerSolver(n_parts=1).solve_batch([]) == []
+
+
+# ---------------------------------------------------------------------------
+# solve_many(batch=) grouping: per-bucket chunks, input-order results
+# ---------------------------------------------------------------------------
+
+class _FakeSolver(EulerSolver):
+    """Records solve/solve_batch calls; never touches a device."""
+
+    def __init__(self):
+        super().__init__(n_parts=1, backend="device")
+        self.calls = []
+
+    def bucket_of(self, graph, part_of_vertex=None):
+        return graph.num_edges  # bucket by size, no prep needed
+
+    def solve(self, graph, part_of_vertex=None, fused=None):
+        self.calls.append(("solve", [graph]))
+        return ("res", graph)
+
+    def solve_batch(self, graphs, fused=None):
+        graphs = list(graphs)
+        self.calls.append(("batch", graphs))
+        return [("res", g) for g in graphs]
+
+
+def _toy_graphs():
+    from repro.core.graph import Graph
+
+    def cycle(k):
+        v = np.arange(k, dtype=np.int64)
+        return Graph(k, v, np.roll(v, -1))
+
+    return [cycle(4), cycle(8), cycle(4), cycle(8), cycle(4)]
+
+
+def test_solve_many_batch_groups_and_preserves_order():
+    solver = _FakeSolver()
+    graphs = _toy_graphs()
+    out = solver.solve_many(graphs, batch=2)
+    # results come back in input order
+    assert [g for _, g in out] == graphs
+    # chunks: bucket 4 → [g0, g2], [g4]; bucket 8 → [g1, g3]
+    sizes = sorted(len(gs) for kind, gs in solver.calls)
+    assert sizes == [1, 2, 2]
+    # full chunks run batched; the leftover runs on the single-graph
+    # program — never a one-off (bucket, B′) compile (DESIGN.md §8)
+    kinds = sorted((kind, len(gs)) for kind, gs in solver.calls)
+    assert kinds == [("batch", 2), ("batch", 2), ("solve", 1)]
+
+
+def test_solve_many_batch_default_is_sequential():
+    solver = _FakeSolver()
+    graphs = _toy_graphs()
+    out = solver.solve_many(graphs)
+    assert [kind for kind, _ in solver.calls] == ["solve"] * len(graphs)
+    assert [g for _, g in out] == graphs
+
+
+# ---------------------------------------------------------------------------
+# micro-batching scheduler (launch/serve.py)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_micro_batcher_quota_deadline_drain():
+    solver = _FakeSolver()
+    clock = _Clock()
+    mb = MicroBatcher(solver, max_batch=2, deadline_s=0.010, clock=clock)
+    graphs = _toy_graphs()  # buckets: 4, 8, 4, 8, 4
+
+    assert mb.submit(0, graphs[0]) == []          # bucket 4: 1 pending
+    assert mb.submit(1, graphs[1]) == []          # bucket 8: 1 pending
+    done = mb.submit(2, graphs[2])                # bucket 4 hits quota
+    assert [seq for seq, _ in done] == [0, 2]
+    assert solver.calls[-1] == ("batch", [graphs[0], graphs[2]])
+
+    assert mb.poll() == []                        # deadline not reached
+    clock.t = 0.011
+    done = mb.poll()                              # bucket 8 flushes partial
+    assert [seq for seq, _ in done] == [1]
+    # partial flushes use the warmed single-graph program, not a one-off
+    # (bucket, 1) batched compile
+    assert solver.calls[-1] == ("solve", [graphs[1]])
+
+    assert mb.submit(4, graphs[4]) == []
+    done = mb.drain()
+    assert [seq for seq, _ in done] == [4]
+    assert mb.pending == {}
+    assert mb.flushes == [2, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# PR 2 deprecation shims still warn and work (one release-cycle guarantee)
+# ---------------------------------------------------------------------------
+
+def test_pr2_deprecation_shims_still_warn_and_work():
+    from repro.core.graph import partition_graph
+    from repro.core.host_engine import HostEngine
+    from repro.euler import EulerResult
+
+    g = eulerian_rmat(6, avg_degree=4, seed=7)
+    pg = partition_graph(g, np.zeros(g.num_vertices, dtype=np.int64))
+    with pytest.warns(DeprecationWarning):
+        res = HostEngine(pg).run(validate=True)
+    assert isinstance(res, EulerResult) and res.valid
+
+    from repro.core import host_engine
+
+    assert host_engine.EulerResult is EulerResult  # module __getattr__ shim
