@@ -39,6 +39,7 @@ def main():
         "fused": lambda: bench_scaling.run_device(),
         "serving": lambda: bench_scaling.run_serving(),
         "batched": lambda: bench_scaling.run_batched(series=batched_series),
+        "ladder": lambda: bench_scaling.run_ladder(),
         "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
                                            parts=kw["parts"]),
         "phase1": lambda: bench_phase1.run(**kw),
@@ -81,6 +82,13 @@ def _summarize(name, res):
         for r in res:
             print(f"  {r['graph']:>10s}: B={r['B']} "
                   f"{r['circuits/s']} circuits/s ({r['x_vs_B1']}x vs B=1)")
+    elif name == "ladder":
+        for r in res:
+            print(f"  {r['config']:>18s}: {r['buckets']} bucket(s), "
+                  f"session {r['circuits/s']} circuits/s "
+                  f"({r['x_vs_pr3']}x vs pr3-sync; steady "
+                  f"{r['steady_circuits/s']}), widths {r['widths_used']}, "
+                  f"rounds {r['splice_rounds']}/{r['p3_rounds']}")
     elif name == "phase1":
         print(f"  fit over {res['points']} points: R2={res['r2']}")
     elif name == "memory":

@@ -152,6 +152,80 @@ class FusedOut(NamedTuple):
     phase3_ok: jnp.ndarray  # [] bool: pivot splice converged
 
 
+class PendingRun:
+    """An in-flight fused run: the device program has been dispatched
+    asynchronously, nothing has been fetched yet.
+
+    ``ready()`` is a non-blocking completion probe (the circuit buffer is
+    only materialized once the whole program finishes); ``wait()``
+    performs the run's ONE device→host sync and builds the per-graph
+    results.  The serving pipeline holds these to overlap host-side prep
+    of the next flush with device execution of the current one
+    (DESIGN.md §9); ``_run``/``_run_batch`` are dispatch→wait with no
+    overlap.
+    """
+
+    def __init__(self, engine: "DistributedEngine", out: FusedOut,
+                 pgs: List[PartitionedGraph], trees, t0: float,
+                 batch: Optional[int]):
+        self.engine = engine
+        self.out: Optional[FusedOut] = out
+        self.pgs = pgs
+        self.trees = trees
+        self.t0 = t0
+        self.batch = batch              # None → single-graph program
+        self._results = None
+
+    def ready(self) -> bool:
+        if self._results is not None:
+            return True
+        probe = getattr(self.out.circuit, "is_ready", None)
+        return bool(probe()) if probe is not None else True
+
+    def wait(self):
+        """Block until the device run completes; returns one
+        :class:`repro.euler.result.EulerResult` per graph (the fetch is
+        the run's single device→host sync)."""
+        if self._results is not None:
+            return self._results
+        from ..euler.result import EulerResult
+
+        out = self.out
+        circuit, mate, flags, metrics, ok3 = jax.device_get(
+            (out.circuit, out.mate, out.flags, out.metrics, out.phase3_ok)
+        )
+        self.out = None                 # free the device buffers
+        run_s = time.perf_counter() - self.t0
+        if self.batch is None:          # unify to batched layouts
+            circuit, mate, ok3 = circuit[None], mate[None], ok3[None]
+            flags, metrics = flags[:, None], metrics[:, None]
+        # circuit [B, E], mate [B, 2E], flags/metrics [n, B, L, 4], ok3 [B]
+        assert flags.all(), (
+            f"convergence/capacity flags failed: {flags.all((0, 2, 3))}"
+        )
+        assert ok3.all(), "Phase 3 pivot splice failed to converge"
+        assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
+        circuit = circuit.astype(np.int64)
+        assert (circuit >= 0).all(), "circuit emission left gaps"
+        n_levels = self.engine.n_levels
+        results = []
+        for b, pg in enumerate(self.pgs):
+            metrics_list = [metrics[:, b, lvl] for lvl in range(n_levels)]
+            timings = {"run_s": run_s}
+            if self.batch is not None:
+                timings["batch"] = float(self.batch)
+            results.append(EulerResult(
+                circuit=circuit[b], mate=mate[b].astype(np.int64),
+                tree=self.trees[b],
+                levels=EulerResult.levels_from_metrics(metrics_list),
+                supersteps=n_levels, backend="device", fused=True,
+                graph=pg.graph, phase3_converged=bool(ok3[b]),
+                timings=timings,
+            ))
+        self._results = results
+        return results
+
+
 def build_anc_table(tree: MergeTree, n: int) -> np.ndarray:
     """``anc[level, part0] → active partition after that level's merges``
     for every level at once (vectorized ``ancestor_at_level``)."""
@@ -213,20 +287,25 @@ class DistributedEngine:
         remote_dedup: bool = True,
         deferred_transfer: bool = True,
         on_trace: Optional[Callable[[], None]] = None,
+        on_upload: Optional[Callable[[], None]] = None,
     ):
         self.mesh = mesh
         self.axes = axis_names
         self.caps = caps
-        self.n_levels = n_levels  # number of supersteps = tree height + 1
+        self.n_levels = n_levels  # supersteps ≥ tree height + 1 (§9 ladder)
         self.n = int(np.prod([mesh.shape[a] for a in axis_names]))
         self.remote_dedup = remote_dedup
         self.deferred_transfer = deferred_transfer
         # trace probe: called once each time a whole-run/superstep program
         # is (re)traced by jit — the solver's compile-cache accounting
         self.on_trace = on_trace
+        # transfer probe: called once per host→device initial-state upload
+        # (single or stacked batch) — backs the §9 device-residency
+        # acceptance ("warm repeat solves upload nothing")
+        self.on_upload = on_upload
         self._step = None
-        # (num_edges, batch-or-None) → compiled fused whole-run program
-        self._fused: Dict[Tuple[int, Optional[int]], object] = {}
+        # (num_edges, batch-or-None, donated) → compiled fused program
+        self._fused: Dict[Tuple[int, Optional[int], bool], object] = {}
         self._p3 = None                        # eager-path Phase 3 program
         # id(pg) → loaded inputs; serving pools re-solve the same
         # PartitionedGraph objects, so skip the host-side table build
@@ -236,8 +315,10 @@ class DistributedEngine:
         self._load_cache_max = 32
         # tuple(id(pg)…) → stacked device-resident batch inputs, same
         # hot-pool rationale (a steady micro-batch re-solves one pool).
+        # LRU so the compositions a width-ladder flush cycles through all
+        # stay resident.
         self._batch_cache: Dict[tuple, dict] = {}
-        self._batch_cache_max = 4
+        self._batch_cache_max = 8
 
     # ------------------------------------------------------------------
     # loading
@@ -349,6 +430,18 @@ class DistributedEngine:
         assert pg.num_parts == self.n, (pg.num_parts, self.n)
         tree, act, la, cut_ids, anc_table = self.plan(pg)
         self.tree = tree
+        # §9 level ladder: the engine may run more supersteps than the
+        # graph's real merge tree has levels.  Pad the ancestor table by
+        # repeating its last (fully merged) row — the extra levels route
+        # everything to the root partition, ship nothing, and pair
+        # nothing, so they are byte-transparent no-ops.
+        rows = max(1, self.n_levels - 1)
+        assert self.n_levels >= tree.height + 1, (self.n_levels, tree.height)
+        if anc_table.shape[0] < rows:
+            anc_table = np.concatenate([
+                anc_table,
+                np.repeat(anc_table[-1:], rows - anc_table.shape[0], axis=0),
+            ])
         n, c = self.n, self.caps
         g = pg.graph
 
@@ -615,7 +708,8 @@ class DistributedEngine:
     # ------------------------------------------------------------------
     # the fused whole-run program
     # ------------------------------------------------------------------
-    def make_fused(self, num_edges: int, batch: Optional[int] = None):
+    def make_fused(self, num_edges: int, batch: Optional[int] = None,
+                   donate: bool = False):
         """One compiled program for the entire run (DESIGN.md §4):
 
           · ``lax.scan`` over all ``n_levels`` supersteps inside a single
@@ -645,6 +739,13 @@ class DistributedEngine:
         (default) keeps the original single-graph program — its cache key
         and jaxpr are unchanged, so existing single-solve callers never
         retrace.
+
+        ``donate=True`` donates the initial-state buffers to the program
+        (the §9 state-donation entry point): a one-shot caller that keeps
+        no device-resident copy lets XLA reuse the state's device memory
+        for the run, instead of holding both the inputs and the working
+        set live.  Never combine with cached device-resident state — a
+        donated buffer is dead after the call.
         """
         n, c = self.n, self.caps
         axes = self.axes
@@ -720,6 +821,8 @@ class DistributedEngine:
                 self.on_trace()
             return fn(anc, state, sv)
 
+        if donate:
+            return jax.jit(traced, donate_argnums=(1,))
         return jax.jit(traced)
 
     # ------------------------------------------------------------------
@@ -756,6 +859,60 @@ class DistributedEngine:
             )
         return self._p3
 
+    def _dispatch(self, pg: PartitionedGraph,
+                  resident: bool = True) -> PendingRun:
+        """Dispatch ONE fused run asynchronously; no host sync happens
+        until :meth:`PendingRun.wait`.
+
+        ``resident=True`` (default) caches the uploaded device state on
+        the ``_load_cached`` entry so repeat solves of the same graph
+        skip the host→device transfer entirely.  ``resident=False`` is
+        the one-shot path: a fresh upload donated to the program
+        (``donate_argnums``), so XLA may reuse the state buffers for the
+        run's scratch space instead of holding two copies.
+        """
+        t0 = time.perf_counter()
+        ent = self._load_cached(pg)
+        E = pg.graph.num_edges
+        if resident:
+            if ent["dev"] is None:
+                ent["dev"] = (
+                    jax.tree.map(jnp.asarray, ent["state"]),
+                    jnp.asarray(ent["anc"]),
+                    jnp.asarray(ent["sv"], dtype=I32),
+                )
+                if self.on_upload is not None:
+                    self.on_upload()
+            state, anc, sv_dev = ent["dev"]
+            donate = False
+        else:
+            state = jax.tree.map(jnp.asarray, ent["state"])
+            anc = jnp.asarray(ent["anc"])
+            sv_dev = jnp.asarray(ent["sv"], dtype=I32)
+            if self.on_upload is not None:
+                self.on_upload()
+            donate = True
+        prog = self._fused.get((E, None, donate))
+        if prog is None:
+            prog = self._fused[(E, None, donate)] = \
+                self.make_fused(E, donate=donate)
+        if donate:
+            with warnings.catch_warnings():
+                # CPU backends can't always honor donation; harmless
+                warnings.filterwarnings(
+                    "ignore", message=".*donated buffer.*")
+                out = prog(anc, state, sv_dev)
+        else:
+            out = prog(anc, state, sv_dev)
+        return PendingRun(self, out, [pg], [ent["tree"]], t0, batch=None)
+
+    def evict_program(self, num_edges: int, batch: Optional[int]) -> None:
+        """Drop the compiled fused program(s) for ``(num_edges, batch)``
+        so the solver's width-LRU frees the executable, not just its
+        accounting entry."""
+        self._fused.pop((num_edges, batch, False), None)
+        self._fused.pop((num_edges, batch, True), None)
+
     def _run(self, pg: PartitionedGraph, fused: bool = True):
         """Execute the full BSP run on the mesh; returns the unified
         :class:`repro.euler.result.EulerResult` (internal — call sites go
@@ -767,6 +924,9 @@ class DistributedEngine:
         """
         from ..euler.result import EulerResult
 
+        if fused:
+            return self._dispatch(pg).wait()[0]
+
         t0 = time.perf_counter()
         ent = self._load_cached(pg)
         if ent["dev"] is None:
@@ -775,36 +935,11 @@ class DistributedEngine:
                 jnp.asarray(ent["anc"]),
                 jnp.asarray(ent["sv"], dtype=I32),
             )
+            if self.on_upload is not None:
+                self.on_upload()
         state, anc, sv_dev = ent["dev"]
         E = pg.graph.num_edges
         sv = ent["sv"]
-
-        if fused:
-            prog = self._fused.get((E, None))
-            if prog is None:
-                prog = self._fused[(E, None)] = self.make_fused(E)
-            out = prog(anc, state, sv_dev)
-            # the ONE device→host sync of the run
-            circuit, mate, flags, metrics, ok3 = jax.device_get(
-                (out.circuit, out.mate, out.flags, out.metrics,
-                 out.phase3_ok)
-            )
-            assert flags.all(), (
-                f"convergence/capacity flags failed: {flags.all((0, 1))}"
-            )
-            assert ok3, "Phase 3 pivot splice failed to converge"
-            assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
-            circuit = circuit.astype(np.int64)
-            assert (circuit >= 0).all(), "circuit emission left gaps"
-            metrics_list = [metrics[:, lvl] for lvl in range(self.n_levels)]
-            return EulerResult(
-                circuit=circuit, mate=mate.astype(np.int64),
-                tree=self.tree,
-                levels=EulerResult.levels_from_metrics(metrics_list),
-                supersteps=self.n_levels, backend="device", fused=True,
-                graph=pg.graph, phase3_converged=bool(ok3),
-                timings={"run_s": time.perf_counter() - t0},
-            )
 
         # ---- eager oracle: per-level programs, host log replay ----
         step = self._step or self.make_superstep()
@@ -846,9 +981,10 @@ class DistributedEngine:
             timings={"run_s": time.perf_counter() - t0},
         )
 
-    def _run_batch(self, pgs: List[PartitionedGraph]):
-        """Execute B same-shape runs as ONE batched fused program
-        (DESIGN.md §8) and ONE host sync; returns one
+    def _dispatch_batch(self, pgs: List[PartitionedGraph]) -> PendingRun:
+        """Dispatch B same-shape runs as ONE batched fused program
+        (DESIGN.md §8) asynchronously; :meth:`PendingRun.wait` performs
+        the single host sync and yields one
         :class:`repro.euler.result.EulerResult` per graph, byte-identical
         to B sequential :meth:`_run` calls.
 
@@ -857,8 +993,6 @@ class DistributedEngine:
         the solver guarantees this by batching within one shape bucket.
         Batched execution is fused-only; the eager oracle stays per-graph.
         """
-        from ..euler.result import EulerResult
-
         t0 = time.perf_counter()
         assert pgs, "empty batch"
         E = pgs[0].graph.num_edges
@@ -868,6 +1002,7 @@ class DistributedEngine:
         if bent is not None and all(a is b for a, b in zip(bent["pgs"], pgs)):
             anc, state, sv = bent["dev"]
             trees = bent["trees"]
+            self._batch_cache[bkey] = self._batch_cache.pop(bkey)  # LRU touch
         else:
             states, ancs, svs, trees = [], [], [], []
             for pg in pgs:
@@ -890,37 +1025,19 @@ class DistributedEngine:
             self._batch_cache[bkey] = {
                 "pgs": list(pgs), "dev": (anc, state, sv), "trees": trees,
             }
+            if self.on_upload is not None:
+                self.on_upload()
 
-        prog = self._fused.get((E, B))
+        prog = self._fused.get((E, B, False))
         if prog is None:
-            prog = self._fused[(E, B)] = self.make_fused(E, batch=B)
+            prog = self._fused[(E, B, False)] = self.make_fused(E, batch=B)
         out = prog(anc, state, sv)
-        # the ONE device→host sync of the whole batch
-        circuit, mate, flags, metrics, ok3 = jax.device_get(
-            (out.circuit, out.mate, out.flags, out.metrics, out.phase3_ok)
-        )
-        run_s = time.perf_counter() - t0
-        # circuit [B, E], mate [B, 2E], flags/metrics [n, B, L, 4], ok3 [B]
-        assert flags.all(), (
-            f"convergence/capacity flags failed: {flags.all((0, 2, 3))}"
-        )
-        assert ok3.all(), "Phase 3 pivot splice failed to converge"
-        assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
-        circuit = circuit.astype(np.int64)
-        assert (circuit >= 0).all(), "circuit emission left gaps"
-        results = []
-        for b in range(B):
-            metrics_list = [metrics[:, b, lvl]
-                            for lvl in range(self.n_levels)]
-            results.append(EulerResult(
-                circuit=circuit[b], mate=mate[b].astype(np.int64),
-                tree=trees[b],
-                levels=EulerResult.levels_from_metrics(metrics_list),
-                supersteps=self.n_levels, backend="device", fused=True,
-                graph=pgs[b].graph, phase3_converged=bool(ok3[b]),
-                timings={"run_s": run_s, "batch": float(B)},
-            ))
-        return results
+        return PendingRun(self, out, list(pgs), trees, t0, batch=B)
+
+    def _run_batch(self, pgs: List[PartitionedGraph]):
+        """Synchronous wrapper: dispatch one batched fused run, then
+        immediately perform its single host sync."""
+        return self._dispatch_batch(pgs).wait()
 
     def run(self, pg: PartitionedGraph, validate: bool = True,
             fused: bool = True):

@@ -19,17 +19,20 @@ are deprecated in favour of the solver.  See DESIGN.md §7 (API surface)
 and §8 (batched execution).
 """
 from ..core.engine import (DistributedEngine, EngineCaps, EngineState,
-                           FusedOut, StepOut)
+                           FusedOut, PendingRun, StepOut)
 from ..core.host_engine import HostEngine
-from .bucket import (ceil_pow2, modal_bucket_pool, pad_graph, round_caps,
+from .bucket import (ceil_pow2, ladder_caps, ladder_levels, ladder_rounds,
+                     ladder_waste, modal_bucket_pool, pad_graph, round_caps,
                      strip_circuit)
 from .result import CacheStats, EulerResult
-from .solver import EulerSolver, solve, solve_batch, solve_many
+from .solver import (EulerSolver, PendingSolve, solve, solve_batch,
+                     solve_many)
 
 __all__ = [
     "solve", "solve_many", "solve_batch", "EulerSolver", "EulerResult",
-    "CacheStats",
+    "CacheStats", "PendingSolve", "PendingRun",
     "DistributedEngine", "EngineCaps", "EngineState", "FusedOut", "StepOut",
     "HostEngine", "ceil_pow2", "modal_bucket_pool", "pad_graph",
     "round_caps", "strip_circuit",
+    "ladder_caps", "ladder_levels", "ladder_rounds", "ladder_waste",
 ]

@@ -1,4 +1,4 @@
-"""Geometric shape buckets for the multi-graph serving path (DESIGN.md §7).
+"""Geometric shape buckets for the multi-graph serving path (DESIGN.md §7/§9).
 
 The fused whole-run program is compiled for static shapes: the padded
 per-device tables (:class:`EngineCaps`), the number of scan levels, and
@@ -11,15 +11,23 @@ that fits it:
     graph stays connected, and the dummy section of the resulting circuit
     is contiguous, so stripping it back out leaves a valid Euler circuit
     of the original graph;
-  · every table capacity from ``size_caps`` rounds up to a power of two.
+  · every table capacity from ``size_caps`` is quantized onto a *shared
+    cap ladder* keyed off ``e_cap`` (:func:`ladder_caps`) — independent
+    pow2 rounding per cap (:func:`round_caps`, the pre-ladder scheme)
+    fragments same-scale pools whenever any one field straddles its own
+    pow2 boundary;
+  · the scan length ``n_levels`` rounds up to a power of two
+    (:func:`ladder_levels`) — the extra supersteps past the real merge
+    tree's height are no-ops (all tables are empty after the final real
+    level), so heterogeneous tree heights share one program.
 
-The bucket key is ``(e_cap, n_parts, n_levels, rounded_caps)``; any two
-graphs sharing a key run through the *same* compiled program with zero
-retrace.
+The bucket key is ``(e_cap, n_parts, n_levels, caps)``; any two graphs
+sharing a key run through the *same* compiled program with zero retrace.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 import numpy as np
@@ -69,6 +77,152 @@ def round_caps(caps: EngineCaps, lo: int = 16) -> EngineCaps:
         touch_ship_cap=r(caps.touch_ship_cap),
         mate_ship_cap=r(caps.mate_ship_cap),
     )
+
+
+# ---------------------------------------------------------------------------
+# the shared cap-quantization ladder (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+#: Ladder floor rungs as divisors of the bucket scale ``e_cap``: each cap
+#: field is raised at least to ``e_cap // divisor`` (then pow2-rounded only
+#: if it *exceeds* its floor — the rare outlier escape hatch).  Calibrated
+#: on RMAT pools across scales 5–11: park/ship/open sit at 0.09–0.16·e_cap,
+#: so quarter floors absorb the per-graph variance that fragments
+#: independent pow2 rounding.  Touch floors at ``e_cap`` itself — its true
+#: worst case (every stub can contribute a touch pair), observed at
+#: 0.33–0.6·e_cap — so touch never escapes and never splits a bucket.
+LADDER_DIVISORS = {
+    "park_cap": 4,
+    "ship_cap": 4,
+    "open_cap": 4,
+    "open_ship_cap": 4,
+    "touch_cap": 1,
+    "touch_ship_cap": 1,
+}
+
+
+def _edge_floor(e_cap: int, n_parts: int, slack: float) -> int:
+    """Worst-case padded local-edge table width over a bucket, rounded up
+    to an ``e_cap/8`` rung.  The dummy pad cycle lands entirely in the
+    anchor's partition, so the heaviest partition holds up to
+    ``e_cap/(2·n) + e_cap/2`` edges (pow2 bucketing keeps the pad under
+    ``e_cap/2`` except in the ``min_bucket_edges`` floor regime, where the
+    pad can approach ``e_cap`` — hence the clamp to ``e_cap``)."""
+    rung = max(1, e_cap // 8)
+    need = math.ceil((e_cap / (2 * n_parts) + e_cap / 2) * slack)
+    return min(e_cap, rung * math.ceil(need / rung))
+
+
+def ladder_caps(caps: EngineCaps, e_cap: int, n_parts: int,
+                slack: float = 1.3, lo: int = 16) -> EngineCaps:
+    """Quantize every table capacity onto the bucket's shared cap ladder.
+
+    Unlike :func:`round_caps` (independent pow2 per field), all fields are
+    floored at fixed fractions of the *shared* bucket scale ``e_cap``:
+    edge/new at the worst-case padded-partition rung, park/ship/open at
+    ``e_cap/4``, touch at its ``e_cap`` worst case.  A field exceeding its
+    floor (a shape outlier) still rounds up pow2, so correctness never
+    depends on the profile — but same-scale pools collapse onto one cap
+    tuple instead of fragmenting at every field's pow2 boundary.
+    Padded-table waste is bounded by the floor profile itself: the
+    quantized per-device area is at most ``max(profile_area, 2 × exact
+    area)``, where ``profile_area ≈ 4.5 · e_cap`` longs against an exact
+    area that is itself ``≥ 1.5 · e_cap`` for any padded bucket member
+    (edge + new tables alone) — measured per solve by
+    :func:`ladder_waste`.
+
+    >>> from repro.core.engine import EngineCaps
+    >>> a = EngineCaps(edge_cap=80, park_cap=15, ship_cap=13, new_cap=80,
+    ...                open_cap=20, touch_cap=57, open_ship_cap=20,
+    ...                touch_ship_cap=57)
+    >>> b = EngineCaps(edge_cap=72, park_cap=20, ship_cap=20, new_cap=72,
+    ...                open_cap=16, touch_cap=52, open_ship_cap=16,
+    ...                touch_ship_cap=52)
+    >>> ladder_caps(a, 128, 8) == ladder_caps(b, 128, 8)   # one bucket
+    True
+    >>> ladder_caps(a, 128, 8).park_cap                    # e_cap/4 floor
+    32
+    """
+    ef = max(_edge_floor(e_cap, n_parts, slack), lo)
+
+    def q(v: int, floor: int) -> int:
+        if not v:
+            return 0
+        floor = max(int(floor), lo)
+        return floor if v <= floor else ceil_pow2(v, lo)
+
+    return dataclasses.replace(
+        caps,
+        edge_cap=q(caps.edge_cap, ef),
+        new_cap=q(caps.new_cap, ef),
+        **{f: q(getattr(caps, f), e_cap // d)
+           for f, d in LADDER_DIVISORS.items()},
+    )
+
+
+def ladder_rounds(caps: EngineCaps, e_cap: int) -> EngineCaps:
+    """Schedule-derived straggler budgets for the two convergence loops
+    (ROADMAP: "batch stragglers under vmap").
+
+    Phase 1's splice voting and Phase 3's pivot splice are ``while_loop``s
+    that run a vmapped batch to its *slowest* member; their round budgets
+    bound that tail.  Both merges are vote-and-rotate contractions whose
+    round count grows with the log of the live component count, so the
+    budgets derive from the (quantized) table widths instead of the old
+    fixed 12/64: splice from the Phase 1 stub pool, Phase 3 from the
+    bucket's stub space ``2·e_cap`` (doubled, plus slack, because only the
+    globally-min pivot is *guaranteed* to fire each round).  Computed from
+    bucket-level quantities only, so same-bucket graphs share one budget
+    and the key never re-fragments.
+
+    >>> from repro.core.engine import EngineCaps
+    >>> c = EngineCaps(edge_cap=96, park_cap=32, ship_cap=32, new_cap=96,
+    ...                open_cap=32, touch_cap=64)
+    >>> r = ladder_rounds(c, 128)
+    >>> r.splice_rounds, r.phase3_rounds
+    (11, 24)
+    """
+    pool = 2 * caps.new_cap + caps.open_cap + caps.touch_cap
+    splice = min(16, max(10, math.ceil(math.log2(max(2, pool))) + 2))
+    p3 = min(64, max(24, 2 * math.ceil(math.log2(max(2, 2 * e_cap))) + 8))
+    return dataclasses.replace(caps, splice_rounds=splice, phase3_rounds=p3)
+
+
+def ladder_levels(n_levels: int) -> int:
+    """Quantize the scan length onto the pow2 ladder.
+
+    Merge-tree heights vary per graph even at one scale (BFS partition
+    luck), and ``n_levels`` is part of the compiled shape — without this,
+    same-scale pools split across 3–4 level classes.  Supersteps past the
+    real height are no-ops (after the final real level every table is
+    empty: all stubs are paired at the root, ``la ≤ height`` retains no
+    touch pairs, no parked edge has a later activation), so padding up is
+    byte-transparent; it costs at most 2× scan compute in exchange for
+    collapsing the level classes.
+
+    >>> [ladder_levels(x) for x in (1, 4, 5, 7, 9)]
+    [1, 4, 8, 8, 16]
+    """
+    return ceil_pow2(n_levels)
+
+
+def ladder_waste(exact: EngineCaps, quantized: EngineCaps) -> float:
+    """Padded-compute waste of the quantized caps: quantized / exact
+    per-device table area (longs), over the sizing fields.  1.0 = no
+    waste; the ladder's floor profile bounds this at ~2.3× for any
+    padded bucket member (DESIGN.md §9).
+
+    >>> from repro.core.engine import EngineCaps
+    >>> c = EngineCaps(edge_cap=100, park_cap=10, ship_cap=10, new_cap=100,
+    ...                open_cap=10, touch_cap=50)
+    >>> ladder_waste(c, c)
+    1.0
+    """
+    fields = ("edge_cap", "park_cap", "ship_cap", "new_cap", "open_cap",
+              "touch_cap", "open_ship_cap", "touch_ship_cap")
+    num = sum(getattr(quantized, f) for f in fields)
+    den = max(1, sum(getattr(exact, f) for f in fields))
+    return num / den
 
 
 def pad_graph(graph: Graph, part_of_vertex: np.ndarray,

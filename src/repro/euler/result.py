@@ -41,6 +41,9 @@ class CacheStats:
     hits: int = 0                    # cumulative (bucket, B) cache hits
     misses: int = 0                  # cumulative (bucket, B) cache misses
     traces: int = 0                  # times a whole-run program was traced
+    evictions: int = 0               # (bucket, B) programs dropped by LRU
+    prewarms: int = 0                # programs compiled by prewarm()
+    state_uploads: int = 0           # host→device EngineState transfers
 
     @property
     def compiles(self) -> int:

@@ -13,8 +13,19 @@ bucket reuses the lowered fused scan with zero retrace.  Same-bucket
 graphs can additionally be *batched*: ``solve_batch`` stacks B of them
 along a leading batch axis and runs ONE fused device program — one
 dispatch, one host sync — byte-identical to B sequential solves
-(DESIGN.md §8).  Cache accounting (hits / misses / traces, per
-``(bucket, B)`` program) is reported in every result's ``cache`` stats.
+(DESIGN.md §8).  Cache accounting (hits / misses / traces / evictions,
+per ``(bucket, B)`` program) is reported in every result's ``cache``
+stats.
+
+The serving warm path (DESIGN.md §9) builds on four solver features:
+bucket keys quantized onto a shared cap/level ladder (``bucket.py``) so
+same-scale pools share programs; a per-bucket *width ladder* of batched
+programs compiled ahead of arrivals (:meth:`EulerSolver.prewarm` /
+:meth:`EulerSolver.warmed_widths`); device-resident initial state for
+repeat solves of pooled graphs (zero host→device upload, counted in
+``cache.state_uploads``); and asynchronous dispatch
+(:meth:`EulerSolver.solve_async` / :meth:`EulerSolver.solve_batch_async`
+returning :class:`PendingSolve`) so host prep overlaps device execution.
 
     from repro.euler import solve, EulerSolver
 
@@ -29,20 +40,84 @@ batched execution model.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Iterable, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.engine import DistributedEngine, EngineCaps
+from ..core.engine import DistributedEngine, EngineCaps, PendingRun
 from ..core.graph import Graph, partition_graph
 from ..core.host_engine import HostEngine
 from ..core.phase2 import generate_merge_tree
 from ..graphgen.partition import partition_vertices
-from .bucket import ceil_pow2, pad_graph, round_caps, strip_circuit
+from .bucket import (ceil_pow2, ladder_caps, ladder_levels, ladder_rounds,
+                     ladder_waste, pad_graph, round_caps, strip_circuit)
 from .result import CacheStats, EulerResult
 
 BucketKey = Tuple[int, int, int, EngineCaps]   # (e_cap, n_parts, n_levels, caps)
+
+
+class PendingSolve:
+    """An in-flight fused solve or batch: dispatched to the device,
+    result not yet fetched.
+
+    ``ready()`` polls completion without blocking; ``results()`` (or
+    ``result()`` for a single-graph solve) performs the run's one
+    device→host sync, strips bucket padding, and stamps cache stats —
+    byte-identical to what the synchronous :meth:`EulerSolver.solve` /
+    :meth:`EulerSolver.solve_batch` path returns.  The serving pipeline
+    holds one of these per in-flight flush so host prep of the next
+    flush overlaps device execution of this one (DESIGN.md §9).
+    """
+
+    def __init__(self, solver: "EulerSolver", run: PendingRun,
+                 graphs: List[Graph], key: BucketKey, hit: bool,
+                 t0: float, t_prep: float, batch: int):
+        self._solver = solver
+        self._run = run
+        self._graphs = graphs
+        self._key = key
+        self._hit = hit
+        self._t0 = t0
+        self._t_prep = t_prep
+        self._batch = batch          # reported width (1 = single program)
+        self._out: Optional[List[EulerResult]] = None
+
+    @property
+    def bucket(self) -> BucketKey:
+        return self._key
+
+    def __len__(self) -> int:
+        return len(self._graphs)
+
+    def ready(self) -> bool:
+        """Non-blocking: has the device run finished?"""
+        return self._out is not None or self._run.ready()
+
+    def results(self) -> List[EulerResult]:
+        """Block for the device run; one result per graph, input order."""
+        if self._out is not None:
+            return self._out
+        results = self._run.wait()
+        total_s = time.perf_counter() - self._t0
+        for g, res in zip(self._graphs, results):
+            res.graph = g
+            res.padded_edges = self._key[0] - g.num_edges
+            res.circuit = strip_circuit(res.circuit, g.num_edges)
+            res.cache = dataclasses.replace(
+                self._solver.cache_stats, bucket=self._key,
+                hit=self._hit, batch=self._batch)
+            res.timings["prepare_s"] = self._t_prep
+            res.timings["total_s"] = total_s
+        self._out = results
+        return results
+
+    def result(self) -> EulerResult:
+        """Single-solve convenience accessor."""
+        assert len(self._graphs) == 1, "batched solve: use results()"
+        return self.results()[0]
 
 
 class EulerSolver:
@@ -80,6 +155,31 @@ class EulerSolver:
     partition_seed:     seed for the built-in BFS partitioner.
     min_bucket_edges:   smallest edge bucket (keeps tiny graphs from
                         fragmenting the cache).
+    cap_ladder:         quantize table caps onto the shared bucket ladder
+                        (``ladder_caps``) instead of independent pow2 per
+                        field, collapsing same-scale pools into 1–2
+                        buckets (default on; off restores PR 3 keying).
+    level_ladder:       quantize merge-tree height onto the pow2 ladder
+                        (``ladder_levels``) so partition luck can't split
+                        a scale across level classes (default on).
+    straggler_cap:      derive the Phase 1/Phase 3 ``while_loop`` round
+                        budgets from the bucket schedule
+                        (``ladder_rounds``) instead of fixed 12/64,
+                        bounding vmapped-batch straggler tails.
+    ladder_waste_cap:   buckets whose quantized/exact table-area ratio
+                        exceeds this fall back to plain ``round_caps``
+                        keying, bounding padded-compute waste by
+                        construction.
+    width_ladder:       partial-flush batch widths :meth:`prewarm`
+                        compiles by default (``max_batch`` is appended by
+                        the serving tier).
+    program_cache_max:  LRU cap on compiled ``(bucket, B)`` programs;
+                        evictions drop the executable and are counted in
+                        cache stats.
+    device_resident:    keep each prepared graph's initial device state
+                        cached on device (repeat solves skip the
+                        host→device upload); off = donate a fresh upload
+                        per solve.
     """
 
     def __init__(
@@ -93,6 +193,13 @@ class EulerSolver:
         slack: float = 1.3,
         partition_seed: int = 0,
         min_bucket_edges: int = 64,
+        cap_ladder: bool = True,
+        level_ladder: bool = True,
+        straggler_cap: bool = True,
+        ladder_waste_cap: float = 4.0,
+        width_ladder: Sequence[int] = (1, 2, 4),
+        program_cache_max: int = 32,
+        device_resident: bool = True,
     ):
         assert backend in ("device", "host"), backend
         self.backend = backend
@@ -102,6 +209,13 @@ class EulerSolver:
         self.slack = slack
         self.partition_seed = partition_seed
         self.min_bucket_edges = min_bucket_edges
+        self.cap_ladder = cap_ladder
+        self.level_ladder = level_ladder
+        self.straggler_cap = straggler_cap
+        self.ladder_waste_cap = float(ladder_waste_cap)
+        self.width_ladder = tuple(sorted({int(w) for w in width_ladder}))
+        self.program_cache_max = int(program_cache_max)
+        self.device_resident = device_resident
         self._mesh = mesh
         if n_parts is None:
             if mesh is not None:
@@ -119,17 +233,27 @@ class EulerSolver:
         # recompile if that shape comes back.
         self._engines: dict = {}
         self._engines_max = 16
-        # (bucket, B-or-None) program keys already compiled this session;
-        # backs the per-solve hit/miss accounting.  Purged with the
-        # owning engine on eviction.
-        self._programs: set = set()
+        # (bucket, B-or-None) → True for every program compiled and still
+        # live this session; an LRU bounded by ``program_cache_max``.
+        # Backs the per-solve hit/miss accounting, the batcher's
+        # ``warmed_widths`` query, AND eviction: dropping an entry also
+        # drops the engine's compiled executable (``evict_program``), not
+        # just the bookkeeping.  Bucket eviction purges its widths too.
+        self._programs: OrderedDict = OrderedDict()
         # per-graph prep memo (partition/pad/plan/caps): repeat solves of
         # the same Graph object — the serving pool pattern — skip straight
         # to the compiled program.  Bounded FIFO; identity-keyed with the
         # graph kept alive by the entry so ids can't be recycled.
         self._prep_cache: dict = {}
         self._prep_cache_max = 64
+        # measured quantized/exact table-area ratio per bucket key
+        self.bucket_waste: dict = {}
         self.cache_stats = CacheStats()
+        # one solver may be driven from a serving thread and a background
+        # prewarm thread at once: the lock serializes host-side mutation
+        # (prep memo, program accounting, dispatch); device waits happen
+        # outside it so prewarm compiles overlap in-flight runs.
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------
     @property
@@ -159,32 +283,57 @@ class EulerSolver:
         """Partition, pad into the bucket, plan the merge tree, size caps.
         Returns (padded pg, tree, bucket key).  Memoized per Graph object
         (default partitioning only) so repeat solves of a pooled request
-        graph skip the host-side prep entirely."""
+        graph skip the host-side prep entirely.
+
+        Bucket keying quantizes every shape dimension onto the shared
+        ladder (DESIGN.md §9): caps via ``ladder_caps`` (falling back to
+        plain ``round_caps`` when the measured waste would exceed
+        ``ladder_waste_cap``), scan length via ``ladder_levels``, and the
+        straggler round budgets via ``ladder_rounds``.
+        """
         memo = part_of_vertex is None
-        if memo:
-            hit = self._prep_cache.get(id(graph))
-            if hit is not None and hit[0] is graph:
-                return hit[1]
-        part = self._partition(graph, part_of_vertex)
-        e_cap = ceil_pow2(graph.num_edges, self.min_bucket_edges)
-        g_pad, part_pad = pad_graph(graph, part, e_cap)
-        pg = partition_graph(g_pad, part_pad)
-        if pg.num_parts != self.n_parts:
-            raise ValueError(
-                f"partitioner produced {pg.num_parts} non-empty parts for "
-                f"n_parts={self.n_parts}; the graph is too small or sparse "
-                f"for this partition count"
-            )
-        tree = generate_merge_tree(pg.meta)
-        n_levels = tree.height + 1
-        caps = round_caps(DistributedEngine.size_caps(pg, slack=self.slack))
-        key: BucketKey = (e_cap, self.n_parts, n_levels, caps)
-        out = (pg, tree, key)
-        if memo:
-            if len(self._prep_cache) >= self._prep_cache_max:
-                self._prep_cache.pop(next(iter(self._prep_cache)))
-            self._prep_cache[id(graph)] = (graph, out)
-        return out
+        with self._lock:
+            if memo:
+                hit = self._prep_cache.get(id(graph))
+                if hit is not None and hit[0] is graph:
+                    return hit[1]
+            part = self._partition(graph, part_of_vertex)
+            e_cap = ceil_pow2(graph.num_edges, self.min_bucket_edges)
+            g_pad, part_pad = pad_graph(graph, part, e_cap)
+            pg = partition_graph(g_pad, part_pad)
+            if pg.num_parts != self.n_parts:
+                raise ValueError(
+                    f"partitioner produced {pg.num_parts} non-empty parts "
+                    f"for n_parts={self.n_parts}; the graph is too small or "
+                    f"sparse for this partition count"
+                )
+            tree = generate_merge_tree(pg.meta)
+            n_levels = tree.height + 1
+            if self.level_ladder:
+                n_levels = ladder_levels(n_levels)
+            raw = DistributedEngine.size_caps(pg, slack=self.slack)
+            rounded = round_caps(raw)
+            caps = rounded
+            waste = 1.0
+            if self.cap_ladder:
+                quant = ladder_caps(raw, e_cap, self.n_parts,
+                                    slack=self.slack)
+                waste = ladder_waste(rounded, quant)
+                if waste <= self.ladder_waste_cap:
+                    caps = quant        # outlier shapes keep pow2 keying
+                else:
+                    waste = 1.0
+            if self.straggler_cap:
+                caps = ladder_rounds(caps, e_cap)
+            key: BucketKey = (e_cap, self.n_parts, n_levels, caps)
+            self.bucket_waste[key] = max(self.bucket_waste.get(key, 0.0),
+                                         waste)
+            out = (pg, tree, key)
+            if memo:
+                if len(self._prep_cache) >= self._prep_cache_max:
+                    self._prep_cache.pop(next(iter(self._prep_cache)))
+                self._prep_cache[id(graph)] = (graph, out)
+            return out
 
     def bucket_of(self, graph: Graph,
                   part_of_vertex: Optional[np.ndarray] = None) -> BucketKey:
@@ -197,36 +346,93 @@ class EulerSolver:
     def _on_trace(self):
         self.cache_stats.traces += 1
 
+    def _on_upload(self):
+        self.cache_stats.state_uploads += 1
+
     def _engine_for(self, key: BucketKey) -> DistributedEngine:
         """The (cached) engine owning this bucket's compiled programs."""
-        eng = self._engines.get(key)
-        if eng is None:
-            e_cap, n_parts, n_levels, caps = key
-            eng = DistributedEngine(
-                self.mesh, tuple(self.mesh.axis_names), caps, n_levels,
-                remote_dedup=self.remote_dedup,
-                deferred_transfer=self.deferred_transfer,
-                on_trace=self._on_trace,
-            )
-            if len(self._engines) >= self._engines_max:
-                evicted = next(iter(self._engines))
-                self._engines.pop(evicted)
-                self._programs = {p for p in self._programs
-                                  if p[0] != evicted}
-            self._engines[key] = eng
-        return eng
+        with self._lock:
+            eng = self._engines.get(key)
+            if eng is None:
+                e_cap, n_parts, n_levels, caps = key
+                eng = DistributedEngine(
+                    self.mesh, tuple(self.mesh.axis_names), caps, n_levels,
+                    remote_dedup=self.remote_dedup,
+                    deferred_transfer=self.deferred_transfer,
+                    on_trace=self._on_trace,
+                    on_upload=self._on_upload,
+                )
+                if len(self._engines) >= self._engines_max:
+                    evicted = next(iter(self._engines))
+                    self._engines.pop(evicted)
+                    for p in [p for p in self._programs if p[0] == evicted]:
+                        del self._programs[p]
+                        self.cache_stats.evictions += 1
+                self._engines[key] = eng
+            return eng
 
     def _account(self, key: BucketKey, batch: Optional[int]) -> bool:
-        """Record a solve against the ``(bucket, B)`` program cache;
-        returns whether that program already existed (a cache hit)."""
-        pkey = (key, batch)
-        hit = pkey in self._programs
-        if hit:
-            self.cache_stats.hits += 1
-        else:
-            self.cache_stats.misses += 1
-            self._programs.add(pkey)
-        return hit
+        """Record a solve against the ``(bucket, B)`` program LRU;
+        returns whether that program already existed (a cache hit).  A
+        miss that overflows ``program_cache_max`` evicts the
+        least-recently-used program — executable included — and counts it
+        in ``cache_stats.evictions``."""
+        with self._lock:
+            pkey = (key, batch)
+            hit = pkey in self._programs
+            if hit:
+                self.cache_stats.hits += 1
+                self._programs.move_to_end(pkey)
+            else:
+                self.cache_stats.misses += 1
+                while len(self._programs) >= self.program_cache_max:
+                    (k_old, b_old), _ = self._programs.popitem(last=False)
+                    old_eng = self._engines.get(k_old)
+                    if old_eng is not None:
+                        old_eng.evict_program(k_old[0], b_old)
+                    self.cache_stats.evictions += 1
+                self._programs[pkey] = True
+            return hit
+
+    # ------------------------------------------------------------------
+    # width ladder: pre-warmed batch programs per hot bucket
+    # ------------------------------------------------------------------
+    def warmed_widths(self, key: BucketKey) -> List[int]:
+        """Batch widths with a live compiled program for this bucket
+        (1 = the single-graph program).  The micro-batcher decomposes
+        partial flushes over exactly this set, so it never triggers an
+        inline compile mid-stream."""
+        with self._lock:
+            return sorted({1 if b is None else b
+                           for (k, b) in self._programs if k == key})
+
+    def prewarm(self, graph: Graph,
+                widths: Optional[Sequence[int]] = None) -> List[int]:
+        """Compile the bucket's fused programs for ``widths`` (default:
+        the session ``width_ladder``) ahead of arrivals, by solving
+        ``graph`` — replicated to each width — through the normal path.
+
+        Designed to run on a background thread while the serving loop
+        drains traffic: each width is compiled under the session lock but
+        in-flight device runs are not blocked.  Returns the widths newly
+        compiled here (already-warm widths are skipped); each one counts
+        in ``cache_stats.prewarms``.
+        """
+        widths = self.width_ladder if widths is None else widths
+        key = self.bucket_of(graph)
+        compiled: List[int] = []
+        for w in sorted({max(1, int(w)) for w in widths}):
+            with self._lock:
+                if (key, None if w == 1 else w) in self._programs:
+                    continue
+            if w == 1:
+                self.solve(graph)
+            else:
+                self.solve_batch([graph] * w)
+            with self._lock:
+                self.cache_stats.prewarms += 1
+            compiled.append(w)
+        return compiled
 
     # ------------------------------------------------------------------
     def solve(self, graph: Graph,
@@ -256,12 +462,16 @@ class EulerSolver:
                 )
             return self._solve_host(graph, part_of_vertex, t0)
         fused = self.fused if fused is None else fused
+        if fused:
+            # dispatch + immediate wait: same one-sync semantics as ever
+            return self.solve_async(graph, part_of_vertex).result()
+
+        # ---- eager per-level oracle (synchronous by design) ----
         pg, tree, key = self._prepare(graph, part_of_vertex)
         t_prep = time.perf_counter() - t0
-
         eng = self._engine_for(key)
         hit = self._account(key, None)
-        res = eng._run(pg, fused=fused)
+        res = eng._run(pg, fused=False)
         res.graph = graph
         res.padded_edges = key[0] - graph.num_edges
         res.circuit = strip_circuit(res.circuit, graph.num_edges)
@@ -270,6 +480,26 @@ class EulerSolver:
         res.timings["prepare_s"] = t_prep
         res.timings["total_s"] = time.perf_counter() - t0
         return res
+
+    def solve_async(self, graph: Graph,
+                    part_of_vertex: Optional[np.ndarray] = None,
+                    ) -> PendingSolve:
+        """Dispatch a fused device solve without blocking; returns a
+        :class:`PendingSolve` whose ``result()`` performs the run's one
+        host sync.  Device backend + fused mode only (jax dispatches the
+        compiled program asynchronously, so host code — prep of the next
+        request, batching decisions — overlaps device execution)."""
+        if self.backend != "device":
+            raise ValueError("solve_async is a device-backend path; the "
+                             "host engine runs synchronously via solve()")
+        t0 = time.perf_counter()
+        with self._lock:
+            pg, tree, key = self._prepare(graph, part_of_vertex)
+            t_prep = time.perf_counter() - t0
+            eng = self._engine_for(key)
+            hit = self._account(key, None)
+            run = eng._dispatch(pg, resident=self.device_resident)
+        return PendingSolve(self, run, [graph], key, hit, t0, t_prep, 1)
 
     def solve_batch(self, graphs: Iterable[Graph],
                     fused: Optional[bool] = None) -> List[EulerResult]:
@@ -303,33 +533,36 @@ class EulerSolver:
             )
         if len(graphs) == 1:
             return [self.solve(graphs[0], fused=True)]
+        return self.solve_batch_async(graphs).results()
 
+    def solve_batch_async(self, graphs: Iterable[Graph]) -> PendingSolve:
+        """Dispatch B same-bucket graphs as ONE batched fused program
+        without blocking (the async form of :meth:`solve_batch`; same
+        same-bucket requirement, same byte-identical results from
+        ``results()``)."""
+        graphs = list(graphs)
+        assert graphs, "empty batch"
+        if self.backend != "device":
+            raise ValueError("solve_batch_async is a device-backend path")
+        if len(graphs) == 1:
+            return self.solve_async(graphs[0])
         t0 = time.perf_counter()
-        preps = [self._prepare(g, None) for g in graphs]
-        keys = {p[2] for p in preps}
-        if len(keys) > 1:
-            raise ValueError(
-                f"solve_batch needs same-bucket graphs, got {len(keys)} "
-                f"distinct buckets; group with bucket_of() or use "
-                f"solve_many(batch=...)"
-            )
-        key = preps[0][2]
-        t_prep = time.perf_counter() - t0
-        B = len(graphs)
-
-        eng = self._engine_for(key)
-        hit = self._account(key, B)
-        results = eng._run_batch([p[0] for p in preps])
-        total_s = time.perf_counter() - t0
-        for g, res in zip(graphs, results):
-            res.graph = g
-            res.padded_edges = key[0] - g.num_edges
-            res.circuit = strip_circuit(res.circuit, g.num_edges)
-            res.cache = dataclasses.replace(self.cache_stats, bucket=key,
-                                            hit=hit, batch=B)
-            res.timings["prepare_s"] = t_prep
-            res.timings["total_s"] = total_s
-        return results
+        with self._lock:
+            preps = [self._prepare(g, None) for g in graphs]
+            keys = {p[2] for p in preps}
+            if len(keys) > 1:
+                raise ValueError(
+                    f"solve_batch needs same-bucket graphs, got {len(keys)} "
+                    f"distinct buckets; group with bucket_of() or use "
+                    f"solve_many(batch=...)"
+                )
+            key = preps[0][2]
+            t_prep = time.perf_counter() - t0
+            B = len(graphs)
+            eng = self._engine_for(key)
+            hit = self._account(key, B)
+            run = eng._dispatch_batch([p[0] for p in preps])
+        return PendingSolve(self, run, graphs, key, hit, t0, t_prep, B)
 
     def solve_many(self, graphs: Iterable[Graph],
                    fused: Optional[bool] = None,

@@ -1,16 +1,21 @@
 """Request-serving drivers.
 
 Default workload — the paper's own architecture behind the public facade:
-a request loop feeding a stream of generated graphs through ONE persistent
-:class:`repro.euler.EulerSolver` session, scheduled by a *micro-batcher*
-(:class:`MicroBatcher`): requests accumulate per shape-bucket key and
-flush through one batched fused program (``solve_batch``, DESIGN.md §8)
-when a bucket reaches ``--max-batch`` or its oldest request has waited
-``--deadline-ms``.  Each request graph is padded into a geometric shape
-bucket; after warmup every flush reuses a compiled ``(bucket, B)``
-program with zero retrace (DESIGN.md §7), so steady-state throughput is
-pure execution.  Reports circuits/s and the session's compile-cache
-stats; ``--max-batch 1`` recovers the PR 2 one-request-at-a-time loop.
+an arrival-driven loop feeding a stream of generated graphs through ONE
+persistent :class:`repro.euler.EulerSolver` session, scheduled by a
+*micro-batcher* (:class:`MicroBatcher`): requests accumulate per
+shape-bucket key and flush when a bucket reaches ``--max-batch`` or its
+oldest request has waited ``--deadline-ms``.  Flushes dispatch
+*asynchronously* (``solve_batch_async``, DESIGN.md §9) through a
+``--pipeline-depth``-deep window, so host-side prep and batching of the
+next flush overlap device execution of the current one; partial flushes
+decompose onto the largest pre-warmed batch widths (the solver's width
+ladder) instead of falling back to per-graph B=1 loops.  Each request
+graph is padded into a quantized shape bucket (cap/level ladder,
+DESIGN.md §9); after warmup every flush reuses a compiled ``(bucket,
+B)`` program with zero retrace and — for pooled graphs — zero
+host→device state upload.  Reports circuits/s, p50/p95 latency, and the
+session's cache stats; ``--sync --no-ladder`` recovers the PR 3 driver.
 
     PYTHONPATH=src python -m repro.launch.serve --scale 9 --parts 8 \
         --duration 30 --max-batch 8
@@ -27,24 +32,33 @@ import argparse
 import json
 import sys
 import time
+from collections import deque
 
 
 class MicroBatcher:
     """Bucket-keyed micro-batching scheduler over an ``EulerSolver``.
 
-    ``submit(seq, graph)`` queues one request; completed results flush
-    back as ``(seq, EulerResult)`` pairs whenever the request's bucket
-    fills to ``max_batch``.  ``poll()`` flushes buckets whose oldest
-    request has waited past ``deadline_s`` (so rare shapes are not stuck
-    behind the batch quota), and ``drain()`` flushes everything at
-    shutdown.
+    ``submit(seq, graph)`` queues one request; ``poll()`` flushes buckets
+    whose oldest request passed ``deadline_s``; ``drain()`` flushes and
+    completes everything at shutdown.  All three return completed
+    ``(seq, EulerResult)`` pairs (each pair exactly once, seq-sorted
+    within a call).
 
-    Only two program widths ever run: full-quota flushes execute as ONE
-    batched fused device program (:meth:`EulerSolver.solve_batch` at
-    ``B = max_batch``), while partial deadline/drain flushes fall back
-    to per-graph solves on the warmed single-graph program — compiling a
-    one-off ``(bucket, B′)`` program for a rare leftover width would
-    cost far more than it saves in a synchronous driver (DESIGN.md §8).
+    Flushing is asynchronous and width-laddered (DESIGN.md §9):
+
+    - A flush of n requests decomposes greedily onto the *largest
+      pre-warmed* batch widths ≤ n (``solver.warmed_widths`` ∪ {1}),
+      so a 5-request deadline flush with a warmed {1, 2, 4} ladder runs
+      as one B=4 program + one B=1 program instead of five B=1 loops —
+      and never dispatches an unwarmed width, whose multi-second XLA
+      compile would stall every request behind it (``prewarm`` is the
+      one path that adds widths; an unwarmed bucket serves entirely at
+      B=1).
+    - Each dispatch enters a ``pipeline_depth``-deep in-flight window
+      (``solve_batch_async``); the device executes while the host
+      preps/batches the next flush.  Overflowing the window blocks on
+      the *oldest* dispatch, so results complete in dispatch order.
+      ``pipeline_depth=0`` is the synchronous PR 3 driver.
 
     Mixed buckets never share a flush — each bucket queue is
     independent — so no request is padded up to a foreign shape
@@ -52,53 +66,105 @@ class MicroBatcher:
     """
 
     def __init__(self, solver, max_batch: int = 8,
-                 deadline_s: float = 0.010, clock=time.perf_counter):
-        assert max_batch >= 1
+                 deadline_s: float = 0.010, clock=time.perf_counter,
+                 pipeline_depth: int = 2):
+        assert max_batch >= 1 and pipeline_depth >= 0
         self.solver = solver
         self.max_batch = max_batch
         self.deadline_s = deadline_s
         self.clock = clock
+        self.pipeline_depth = pipeline_depth
         self.pending: dict = {}     # bucket key → [(seq, graph, t_arrival)]
-        self.flushes: list = []     # flush sizes, for reporting
+        self.inflight: deque = deque()   # (PendingSolve, [seq], [t_arrival])
+        self.flushes: list = []     # per-dispatch program widths
+        self.latencies: list = []   # per-request arrival→delivery seconds
+
+    # -- pipeline ------------------------------------------------------
+    def _harvest_one(self):
+        """Block on the OLDEST in-flight dispatch and deliver it."""
+        pend, seqs, ts = self.inflight.popleft()
+        results = pend.results()
+        now = self.clock()
+        self.latencies.extend(now - t for t in ts)
+        return list(zip(seqs, results))
+
+    def _harvest(self, block: bool = False):
+        """Deliver completed dispatches, oldest first; ``block=True``
+        waits for all of them (drain), else only already-finished heads
+        are taken."""
+        out = []
+        while self.inflight and (block or self.inflight[0][0].ready()):
+            out.extend(self._harvest_one())
+        return out
+
+    def _widths_for(self, key, n: int):
+        """Program widths a flush of ``n`` may dispatch at: every warmed
+        width plus B=1 (compiled by the bucket's first solve).  An
+        unwarmed width — including the full quota — is never dispatched
+        from the serving loop: a fresh batch program is a multi-second
+        XLA compile that would stall every in-flight request behind it.
+        ``EulerSolver.prewarm`` is the one path that adds widths."""
+        ws = {w for w in self.solver.warmed_widths(key)
+              if 1 <= w <= self.max_batch}
+        ws.add(1)
+        return sorted(ws, reverse=True)
 
     def _flush(self, key):
         reqs = self.pending.pop(key, [])
-        if not reqs:
-            return []
-        graphs = [g for _, g, _ in reqs]
-        if len(graphs) == self.max_batch and self.max_batch > 1:
-            results = self.solver.solve_batch(graphs)
-        else:
-            results = [self.solver.solve(g) for g in graphs]
-        self.flushes.append(len(graphs))
-        return [(seq, res) for (seq, _, _), res in zip(reqs, results)]
+        out = []
+        i = 0
+        while i < len(reqs):
+            n = len(reqs) - i
+            w = next(x for x in self._widths_for(key, n) if x <= n)
+            chunk = reqs[i:i + w]
+            i += w
+            graphs = [g for _, g, _ in chunk]
+            pend = (self.solver.solve_batch_async(graphs) if w > 1
+                    else self.solver.solve_async(graphs[0]))
+            self.inflight.append((pend, [s for s, _, _ in chunk],
+                                  [t for _, _, t in chunk]))
+            self.flushes.append(w)
+            while len(self.inflight) > self.pipeline_depth:
+                out.extend(self._harvest_one())
+        return out
 
+    # -- public interface ----------------------------------------------
     def submit(self, seq: int, graph):
-        """Queue one request; returns any results ready because this
-        submission filled its bucket."""
+        """Queue one request; returns any results completed by the
+        pipeline, plus this bucket's flush if the submission filled it."""
         key = self.solver.bucket_of(graph)
         q = self.pending.setdefault(key, [])
         q.append((seq, graph, self.clock()))
-        if len(q) >= self.max_batch:
-            return self._flush(key)
-        return []
+        out = self._flush(key) if len(q) >= self.max_batch else []
+        out.extend(self._harvest())
+        return sorted(out)
 
     def poll(self):
-        """Flush every bucket whose oldest request passed the deadline."""
+        """Flush every bucket whose oldest request passed the deadline;
+        deliver whatever the pipeline has completed."""
         now = self.clock()
         due = [k for k, q in self.pending.items()
                if q and now - q[0][2] >= self.deadline_s]
         out = []
         for k in due:
             out.extend(self._flush(k))
-        return out
+        out.extend(self._harvest())
+        return sorted(out)
+
+    def next_deadline(self):
+        """Earliest pending-request deadline (None if nothing pending) —
+        the arrival loop sleeps until this instead of spinning."""
+        ts = [q[0][2] for q in self.pending.values() if q]
+        return min(ts) + self.deadline_s if ts else None
 
     def drain(self):
-        """Flush all pending requests (shutdown)."""
+        """Flush all pending requests and complete the pipeline
+        (shutdown); results are seq-sorted — i.e. submit order."""
         out = []
         for k in list(self.pending):
             out.extend(self._flush(k))
-        return out
+        out.extend(self._harvest(block=True))
+        return sorted(out)
 
 
 def main_euler(argv=None):
@@ -128,10 +194,29 @@ def main_euler(argv=None):
     ap.add_argument("--eager", action="store_true",
                     help="per-level eager supersteps instead of the fused "
                          "scan (disables micro-batching)")
+    ap.add_argument("--sync", action="store_true",
+                    help="synchronous dispatch (pipeline depth 0) — the "
+                         "PR 3 driver; default is the async pipeline")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight dispatch window of the async batcher")
+    ap.add_argument("--no-ladder", action="store_true",
+                    help="disable cap/level/round bucket quantization "
+                         "(PR 3 pow2-per-field keying)")
+    ap.add_argument("--widths", default="1,2,4",
+                    help="comma-separated batch widths to pre-warm per "
+                         "hot bucket (max-batch is always added)")
+    ap.add_argument("--no-prewarm", action="store_true",
+                    help="skip the background width-ladder prewarm "
+                         "(partial flushes then run at B=1)")
+    ap.add_argument("--arrival-hz", type=float, default=0.0,
+                    help="paced request arrivals per second "
+                         "(0 → closed loop: submit as fast as served)")
     ap.add_argument("--json", default=None,
                     help="append a JSON line of serving stats to this file")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    import threading
 
     import jax
 
@@ -140,7 +225,13 @@ def main_euler(argv=None):
 
     n_parts = args.parts or len(jax.devices())
     max_batch = 1 if args.eager else args.max_batch
-    solver = EulerSolver(n_parts=n_parts, fused=not args.eager)
+    ladder = not args.no_ladder
+    widths = sorted({int(w) for w in args.widths.split(",") if w}
+                    | {max_batch})
+    solver = EulerSolver(n_parts=n_parts, fused=not args.eager,
+                         cap_ladder=ladder, level_ladder=ladder,
+                         straggler_cap=ladder,
+                         width_ladder=tuple(widths))
     if args.same_bucket:
         from ..euler import modal_bucket_pool
 
@@ -160,48 +251,78 @@ def main_euler(argv=None):
         pool = [eulerian_rmat(args.scale, avg_degree=args.avg_degree,
                               seed=args.seed + i) for i in range(args.pool)]
     mode = "eager" if args.eager else "fused"
+    depth = 0 if (args.sync or args.eager) else args.pipeline_depth
     print(f"serving {mode} on {n_parts} partitions; request pool: "
           f"{len(pool)} graphs, ~{pool[0].num_edges} edges each; "
-          f"micro-batch ≤{max_batch}, deadline {args.deadline_ms}ms")
+          f"micro-batch ≤{max_batch}, deadline {args.deadline_ms}ms, "
+          f"pipeline depth {depth}, widths {widths}")
 
-    # Warmup: one sequential pass compiles each bucket's single-graph
-    # program, then one full-width batch per bucket compiles the
-    # (bucket, max_batch) program the steady-state flushes will reuse.
+    # Cold pass: one sequential sweep compiles each bucket's B=1 program
+    # and measures cold (compile-inclusive) latency for the warm-vs-cold
+    # series.  The width ladder then pre-warms on a background thread —
+    # the batcher only ever dispatches to already-warm widths, so serving
+    # can start immediately and partial flushes upgrade from B=1 to
+    # laddered widths as programs come online.
     t0 = time.perf_counter()
     warm = solver.solve_many(pool)
     warm[0].validate()
-    if max_batch > 1:
-        rep = {}
-        for g, r in zip(pool, warm):
-            rep.setdefault(r.cache.bucket, g)
-        for g in rep.values():
-            solver.solve_batch([g] * max_batch)
+    t_cold = time.perf_counter() - t0
+    cold_thr = len(pool) / max(t_cold, 1e-9)
+    rep = {}
+    for g, r in zip(pool, warm):
+        rep.setdefault(r.cache.bucket, g)
+    t0 = time.perf_counter()
+    if max_batch > 1 and not args.eager and not args.no_prewarm:
+        ladder_widths = [w for w in widths if w > 1]
+        pw = threading.Thread(
+            target=lambda: [solver.prewarm(g, ladder_widths)
+                            for g in rep.values()],
+            name="prewarm", daemon=True)
+        pw.start()
+        pw.join()   # CPU CI host: compiles are GIL-bound, so overlapping
+        # them with the measured loop just skews the series; on a real
+        # accelerator drop the join and serve through the warmup.
     t_warm = time.perf_counter() - t0
     cs = solver.cache_stats
-    print(f"warmup: {t_warm:.2f}s — {len({r.cache.bucket for r in warm})} "
-          f"bucket(s), {cs.compiles} program compile(s)")
+    print(f"cold pass {t_cold:.2f}s ({cold_thr:.2f} circuits/s); width "
+          f"prewarm {t_warm:.2f}s — {len(rep)} bucket(s), "
+          f"{cs.compiles} program compile(s), "
+          f"{cs.prewarms} prewarmed width(s)")
 
     batcher = MicroBatcher(solver, max_batch=max_batch,
-                           deadline_s=args.deadline_ms / 1e3)
+                           deadline_s=args.deadline_ms / 1e3,
+                           pipeline_depth=depth)
     served = 0
     edges = 0
     submitted = 0
     last = None
+    period = 1.0 / args.arrival_hz if args.arrival_hz > 0 else 0.0
     t0 = time.perf_counter()
+    next_arrival = t0
     while True:
-        elapsed = time.perf_counter() - t0
+        now = time.perf_counter()
         # --requests caps *submissions*; the final drain then delivers
         # exactly N results even when flushes complete out of quota
         if args.requests and submitted >= args.requests:
             break
-        if not args.requests and elapsed >= args.duration:
+        if not args.requests and now - t0 >= args.duration:
             break
-        done = batcher.submit(submitted, pool[submitted % len(pool)])
-        submitted += 1
+        done = []
+        if now >= next_arrival:
+            done.extend(batcher.submit(submitted,
+                                       pool[submitted % len(pool)]))
+            submitted += 1
+            next_arrival = (next_arrival + period) if period else now
         done.extend(batcher.poll())
+        if period:
+            # arrival-driven idle: sleep to the next arrival or the next
+            # bucket deadline, whichever fires first (no spinning)
+            dl = batcher.next_deadline()
+            wake = min(next_arrival, dl) if dl is not None else next_arrival
+            pause = wake - time.perf_counter()
+            if pause > 0:
+                time.sleep(min(pause, 0.05))
         for _, res in done:
-            assert res.cache.hit, \
-                "steady-state request missed the program cache"
             served += 1
             edges += len(res.circuit)
             last = res
@@ -214,23 +335,40 @@ def main_euler(argv=None):
     cs = solver.cache_stats
     thr = served / max(elapsed, 1e-9)
     fl = batcher.flushes
+    lat = sorted(batcher.latencies)
+
+    def pct(p):
+        return lat[min(len(lat) - 1, int(p * len(lat)))] * 1e3 if lat else 0.0
+
+    p50, p95 = pct(0.50), pct(0.95)
     print(f"served {served} circuits ({edges} edges) in {elapsed:.2f}s "
           f"→ {thr:.2f} circuits/s, {edges / max(elapsed, 1e-9):.0f} edges/s "
-          f"({len(fl)} flushes, mean batch "
+          f"({len(fl)} dispatches, mean width "
           f"{sum(fl) / max(1, len(fl)):.1f})")
-    print(f"cache: {cs.hits} hits / {cs.misses} misses / "
-          f"{cs.compiles} compiles over the session")
+    print(f"latency p50 {p50:.1f}ms / p95 {p95:.1f}ms; cache: {cs.hits} "
+          f"hits / {cs.misses} misses / {cs.compiles} compiles / "
+          f"{cs.evictions} evictions; {cs.state_uploads} state uploads")
     assert served > 0, "serving loop made no progress"
     last.validate()
     if args.json:
+        width_hist: dict = {}
+        for w in fl:
+            width_hist[str(w)] = width_hist.get(str(w), 0) + 1
         stats = {
             "workload": "euler-serve", "scale": args.scale,
             "parts": n_parts, "max_batch": max_batch,
-            "deadline_ms": args.deadline_ms, "served": served,
+            "deadline_ms": args.deadline_ms, "pipeline_depth": depth,
+            "ladder": ladder, "served": served,
             "elapsed_s": round(elapsed, 3),
             "circuits_per_s": round(thr, 3),
+            "cold_circuits_per_s": round(cold_thr, 3),
+            "cold_s": round(t_cold, 3), "prewarm_s": round(t_warm, 3),
+            "p50_ms": round(p50, 3), "p95_ms": round(p95, 3),
             "mean_flush": round(sum(fl) / max(1, len(fl)), 2),
+            "width_hist": width_hist, "buckets": len(rep),
             "compiles": cs.compiles, "hits": cs.hits, "misses": cs.misses,
+            "evictions": cs.evictions, "prewarms": cs.prewarms,
+            "state_uploads": cs.state_uploads,
         }
         with open(args.json, "a") as f:
             f.write(json.dumps(stats) + "\n")

@@ -1,6 +1,8 @@
-"""Batched device solving (DESIGN.md §8): `solve_batch` byte-equality
-with sequential solves, (bucket, B) program-cache accounting, mixed-bucket
-rejection, `solve_many(batch=)` grouping, and the serving micro-batcher."""
+"""Batched device solving (DESIGN.md §8) and the warm serving path
+(DESIGN.md §9): `solve_batch` byte-equality with sequential solves,
+(bucket, B) program-cache accounting + LRU eviction, the quantized
+bucket ladder, mixed-bucket rejection, `solve_many(batch=)` grouping,
+and the async width-laddered serving micro-batcher."""
 import numpy as np
 import pytest
 
@@ -86,15 +88,41 @@ def test_solve_batch_rejects_host_backend_and_eager():
 # solve_many(batch=) grouping: per-bucket chunks, input-order results
 # ---------------------------------------------------------------------------
 
+class _FakePending:
+    """Stand-in for `PendingSolve`: completion is externally controlled
+    (`is_ready` flag) and the blocking fetch is recorded on the solver."""
+
+    def __init__(self, solver, results):
+        self._solver = solver
+        self._results = results
+        self.is_ready = True
+
+    def ready(self):
+        return self.is_ready
+
+    def results(self):
+        self._solver.fetches.append([g for _, g in self._results])
+        return self._results
+
+
 class _FakeSolver(EulerSolver):
-    """Records solve/solve_batch calls; never touches a device."""
+    """Records solve/dispatch calls; never touches a device.  Warmed
+    batch widths are settable per test (`warmed`), mirroring the real
+    solver's `warmed_widths` query the batcher decomposes flushes on."""
 
     def __init__(self):
         super().__init__(n_parts=1, backend="device")
         self.calls = []
+        self.fetches = []       # blocking results() fetches, in order
+        self.pendings = []
+        self.warmed = []
+        self.auto_ready = True  # False: dispatches stay "running"
 
     def bucket_of(self, graph, part_of_vertex=None):
         return graph.num_edges  # bucket by size, no prep needed
+
+    def warmed_widths(self, key):
+        return sorted(set(self.warmed) | {1})
 
     def solve(self, graph, part_of_vertex=None, fused=None):
         self.calls.append(("solve", [graph]))
@@ -104,6 +132,21 @@ class _FakeSolver(EulerSolver):
         graphs = list(graphs)
         self.calls.append(("batch", graphs))
         return [("res", g) for g in graphs]
+
+    def solve_async(self, graph, part_of_vertex=None):
+        self.calls.append(("solve", [graph]))
+        pend = _FakePending(self, [("res", graph)])
+        pend.is_ready = self.auto_ready
+        self.pendings.append(pend)
+        return pend
+
+    def solve_batch_async(self, graphs):
+        graphs = list(graphs)
+        self.calls.append(("batch", graphs))
+        pend = _FakePending(self, [("res", g) for g in graphs])
+        pend.is_ready = self.auto_ready
+        self.pendings.append(pend)
+        return pend
 
 
 def _toy_graphs():
@@ -153,6 +196,7 @@ class _Clock:
 
 def test_micro_batcher_quota_deadline_drain():
     solver = _FakeSolver()
+    solver.warmed = [2]   # quota width prewarmed; the loop never compiles
     clock = _Clock()
     mb = MicroBatcher(solver, max_batch=2, deadline_s=0.010, clock=clock)
     graphs = _toy_graphs()  # buckets: 4, 8, 4, 8, 4
@@ -176,6 +220,218 @@ def test_micro_batcher_quota_deadline_drain():
     assert [seq for seq, _ in done] == [4]
     assert mb.pending == {}
     assert mb.flushes == [2, 1, 1]
+
+
+def test_micro_batcher_width_ladder_decomposes_partial_flush():
+    """A 5-deep deadline flush with a warmed {2, 4} ladder runs as one
+    B=4 + one B=1 dispatch — never five B=1 loops, never an unwarmed
+    width."""
+    from repro.core.graph import Graph
+
+    solver = _FakeSolver()
+    solver.warmed = [2, 4]
+    clock = _Clock()
+    mb = MicroBatcher(solver, max_batch=8, deadline_s=0.010, clock=clock)
+
+    v = np.arange(4, dtype=np.int64)
+    graphs = [Graph(4, v, np.roll(v, -1)) for _ in range(5)]
+    for i, g in enumerate(graphs):
+        assert mb.submit(i, g) == []
+    clock.t = 0.011
+    done = mb.poll()
+    assert [seq for seq, _ in done] == [0, 1, 2, 3, 4]
+    assert mb.flushes == [4, 1]
+    assert [(k, len(gs)) for k, gs in solver.calls] == \
+        [("batch", 4), ("solve", 1)]
+
+
+def test_micro_batcher_never_dispatches_unwarmed_width():
+    """A quota flush on a bucket with no prewarmed widths decomposes to
+    B=1 dispatches: compiling a fresh batch program inside the serving
+    loop would stall every in-flight request for the XLA compile."""
+    from repro.core.graph import Graph
+
+    solver = _FakeSolver()          # warmed = [] → only B=1 available
+    mb = MicroBatcher(solver, max_batch=2, deadline_s=0.010,
+                      clock=_Clock())
+
+    v = np.arange(4, dtype=np.int64)
+    graphs = [Graph(4, v, np.roll(v, -1)) for _ in range(2)]
+    mb.submit(0, graphs[0])
+    done = mb.submit(1, graphs[1])  # quota hit, max_batch unwarmed
+    assert [seq for seq, _ in done] == [0, 1]
+    assert mb.flushes == [1, 1]
+    assert [k for k, _ in solver.calls] == ["solve", "solve"]
+
+
+def test_micro_batcher_deadline_fires_under_paused_producer():
+    """A lone request must not wait for quota: once its deadline passes,
+    poll() flushes it even though the producer has stopped submitting."""
+    solver = _FakeSolver()
+    clock = _Clock()
+    mb = MicroBatcher(solver, max_batch=4, deadline_s=0.010, clock=clock)
+    graphs = _toy_graphs()
+
+    assert mb.submit(0, graphs[0]) == []
+    # producer pauses: no further submits, repeated polls before the
+    # deadline deliver nothing
+    clock.t = 0.009
+    assert mb.poll() == []
+    clock.t = 0.0101
+    done = mb.poll()
+    assert [seq for seq, _ in done] == [0]
+    assert mb.pending == {}
+    assert solver.calls == [("solve", [graphs[0]])]
+
+
+def test_micro_batcher_pipeline_backpressure_and_drain_order():
+    """The in-flight window blocks on the OLDEST dispatch when full, so
+    fetches happen in dispatch order and drain() delivers every result
+    exactly once, seq-sorted (submit order)."""
+    solver = _FakeSolver()
+    solver.auto_ready = False           # every dispatch "still running"
+    mb = MicroBatcher(solver, max_batch=1, deadline_s=9.0,
+                      clock=_Clock(), pipeline_depth=1)
+    graphs = _toy_graphs()
+
+    out = []
+    for i, g in enumerate(graphs):
+        out.extend(mb.submit(i, g))     # max_batch=1: dispatches at once
+    # depth-1 window: submit i+1 had to block-harvest dispatch i
+    assert [len(f) for f in solver.fetches] == [1] * (len(graphs) - 1)
+    assert solver.fetches == [[g] for g in graphs[:-1]]
+    out.extend(mb.drain())
+    assert [seq for seq, _ in out] == list(range(len(graphs)))
+    assert len(mb.inflight) == 0 and mb.latencies == [0.0] * len(graphs)
+
+
+def test_micro_batcher_sync_mode_is_depth_zero():
+    """pipeline_depth=0 recovers the synchronous PR 3 driver: every
+    dispatch is harvested before _flush returns."""
+    solver = _FakeSolver()
+    solver.auto_ready = False
+    mb = MicroBatcher(solver, max_batch=2, deadline_s=9.0,
+                      clock=_Clock(), pipeline_depth=0)
+    graphs = _toy_graphs()
+    done = mb.submit(0, graphs[0]) + mb.submit(1, graphs[2])  # bucket 4
+    assert [seq for seq, _ in done] == [0, 1]
+    assert len(mb.inflight) == 0
+
+
+# ---------------------------------------------------------------------------
+# quantized bucket ladder (DESIGN.md §9): fragmentation regression
+# ---------------------------------------------------------------------------
+
+def test_ladder_collapses_scale5_pool_buckets():
+    """ROADMAP bucket-fragmentation repro: a pool of 6 scale-5 RMAT
+    request graphs must land in ≤2 buckets under the quantized ladder
+    (PR 3's independent pow2-per-field keying fragments the same pool
+    across 4+).  Bucket keying is host-side only — no device mesh."""
+    graphs = [eulerian_rmat(5, avg_degree=4, seed=s) for s in range(6)]
+    ladder = EulerSolver(n_parts=8)
+    pr3 = EulerSolver(n_parts=8, cap_ladder=False, level_ladder=False,
+                      straggler_cap=False)
+    nb_ladder = len({ladder.bucket_of(g) for g in graphs})
+    nb_pr3 = len({pr3.bucket_of(g) for g in graphs})
+    assert nb_ladder <= 2, f"ladder pool fragments into {nb_ladder} buckets"
+    assert nb_ladder < nb_pr3, (nb_ladder, nb_pr3)
+    # measured padded-compute waste stays within the configured bound
+    assert ladder.bucket_waste, "no waste measurements recorded"
+    assert all(w <= ladder.ladder_waste_cap
+               for w in ladder.bucket_waste.values())
+
+
+def test_ladder_round_budgets_shrink_straggler_tail():
+    """Schedule-derived round budgets undercut the fixed 12/64 loop caps
+    for small buckets (the vmap straggler tail they bound) and never
+    exceed them."""
+    g = eulerian_rmat(5, avg_degree=4, seed=0)
+    key = EulerSolver(n_parts=8).bucket_of(g)
+    caps = key[3]
+    assert caps.splice_rounds <= 12 and caps.phase3_rounds <= 64
+    assert caps.phase3_rounds < 64   # small bucket: tail actually shrinks
+    fixed = EulerSolver(n_parts=8, straggler_cap=False).bucket_of(g)[3]
+    assert (fixed.splice_rounds, fixed.phase3_rounds) == (12, 64)
+
+
+# ---------------------------------------------------------------------------
+# compiled-program cache: LRU eviction with a configurable cap
+# ---------------------------------------------------------------------------
+
+def test_program_cache_lru_eviction():
+    solver = EulerSolver(n_parts=1, program_cache_max=2)
+    k1, k2, k3 = ("b1",), ("b2",), ("b3",)
+    assert not solver._account(k1, None)       # miss, cached
+    assert not solver._account(k2, None)       # miss, cached (full)
+    assert solver._account(k1, None)           # hit — k1 becomes MRU
+    assert not solver._account(k3, None)       # miss — evicts LRU k2
+    cs = solver.cache_stats
+    assert (cs.hits, cs.misses, cs.evictions) == (1, 3, 1)
+    assert [k for k, _ in solver._programs] == [k1, k3]
+    # eviction also removes the bucket's width from the warm set
+    assert solver.warmed_widths(k2) == []
+    assert solver.warmed_widths(k1) == [1]
+    # stats propagate into results via dataclasses.replace snapshots
+    import dataclasses as dc
+    snap = dc.replace(solver.cache_stats, bucket=k1, hit=True)
+    assert snap.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance: width-laddered partial flushes are byte-equal to solve(),
+# and warm repeat-solves perform zero host→device state uploads
+# ---------------------------------------------------------------------------
+
+def test_width_ladder_flush_byte_equal_and_device_resident():
+    out = run_with_devices("""
+        import numpy as np
+        from repro.euler import EulerSolver
+        from repro.graphgen.eulerize import eulerian_rmat
+        from repro.launch.serve import MicroBatcher
+
+        solver = EulerSolver(n_parts=8)
+        buckets = {}
+        for s in range(40):
+            g = eulerian_rmat(5, avg_degree=5, seed=s)
+            buckets.setdefault(solver.bucket_of(g), []).append(g)
+        key, group = max(buckets.items(), key=lambda kv: len(kv[1]))
+        assert len(group) >= 3, f"modal bucket holds {len(group)} < 3"
+        group = group[:3]
+
+        # pre-warm the width ladder for the hot bucket
+        compiled = solver.prewarm(group[0], widths=(1, 2))
+        assert compiled == [1, 2], compiled
+        assert solver.prewarm(group[0], widths=(1, 2)) == []  # idempotent
+        assert solver.warmed_widths(key) == [1, 2]
+        assert solver.cache_stats.prewarms == 2
+
+        # a 3-request partial flush decomposes onto the warmed ladder:
+        # one B=2 program + one B=1 program, results byte-equal to
+        # sequential one-shot solves
+        mb = MicroBatcher(solver, max_batch=8, deadline_s=0.0)
+        for i, g in enumerate(group):
+            assert mb.submit(i, g) == []      # below quota, nothing due
+        done = dict(mb.drain())
+        assert sorted(done) == [0, 1, 2]
+        assert mb.flushes == [2, 1], mb.flushes
+        assert done[0].cache.batch == 2 and done[2].cache.batch == 1
+
+        fresh = EulerSolver(n_parts=8)
+        for i, g in enumerate(group):
+            ref = fresh.solve(g)
+            assert (done[i].circuit == ref.circuit).all(), i
+            assert (done[i].mate == ref.mate).all(), i
+
+        # transfer probe: a warm repeat solve of a pooled graph performs
+        # ZERO further host->device state uploads
+        up0 = solver.cache_stats.state_uploads
+        r = solver.solve(group[0])
+        assert r.cache.hit
+        assert solver.cache_stats.state_uploads == up0, \\
+            "warm repeat solve re-uploaded device state"
+        print("WIDTH_LADDER_OK", mb.flushes, up0)
+    """, timeout=1800)
+    assert "WIDTH_LADDER_OK" in out
 
 
 # ---------------------------------------------------------------------------
