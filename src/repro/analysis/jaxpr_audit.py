@@ -1,0 +1,392 @@
+"""Audit the fused Euler programs' jaxprs against the engine's schedule.
+
+The engine publishes its collective schedule statically
+(:func:`repro.core.engine.fused_collective_budget`): per scan level, one
+``all_to_all`` per shipped field per table group; after the scan, exactly
+one ``all_gather`` for the replicated device Phase 3; nothing else.  This
+module traces each ``(bucket, batch-width)`` program the solver would
+cache, walks the closed jaxpr, and fails if the compiled program
+communicates — or syncs with the host — anywhere the schedule says it
+must not:
+
+  * collective census == budget, with every ``all_to_all`` inside exactly
+    ONE ``lax.scan`` whose static length equals the bucket's ``n_levels``;
+  * zero host callbacks / infeed / outfeed in the fused body (a stray
+    ``debug_print`` or ``pure_callback`` re-introduces per-level host
+    syncs and silently serializes the BSP pipeline);
+  * Pallas ``pallas_call`` count equals the count implied by the Phase 3
+    round formulas plus the ``fits_resident_vmem`` gate — i.e. the
+    runtime kernel/jnp fallback decision is re-derived statically and
+    must agree with what was actually traced;
+  * the static VMEM cost model (resident jump tables + streamed blocks,
+    from the kernels' block specs) agrees with the runtime
+    ``fits_resident_vmem`` gate and stays under ``VMEM_CORE_BYTES``;
+  * the one-shot program donates its state buffers
+    (``jax.buffer_donor`` present in the lowering) and the cached /
+    batched programs do NOT (their uploaded state must survive reuse).
+
+Byte/FLOP costs are *measured from the jaxpr* (operand avals of the
+collective eqns), with the caps-derived closed-form alongside, so the
+report shows both what the schedule promises and what the trace contains.
+
+Entry points: :func:`audit_program` (one traced program),
+:func:`audit_graph` (every width of a graph's bucket — what
+``EulerSolver.prewarm`` would compile), and the CLI wrapper
+``python -m repro.analysis.audit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import math
+from collections import Counter
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+COLLECTIVES = ("all_to_all", "all_gather", "psum", "ppermute")
+
+#: Primitives that synchronize with, or call back into, the host.  None
+#: may appear in a fused program: each one would stall the device
+#: pipeline once per occurrence (per *level* if inside the scan).
+HOST_SYNC_PRIMS = frozenset({
+    "pure_callback", "io_callback", "callback", "debug_callback",
+    "debug_print", "infeed", "outfeed", "host_local_array_to_global_array",
+    "global_array_to_host_local_array",
+})
+
+DONOR_MARK = "jax.buffer_donor"
+
+
+def _sub_jaxprs(eqn) -> List[Any]:
+    """Nested jaxprs of one eqn (scan/while/cond bodies, pjit calls...)."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    out: List[Any] = []
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for x in vs:
+            if isinstance(x, ClosedJaxpr):
+                out.append(x.jaxpr)
+            elif isinstance(x, Jaxpr):
+                out.append(x)
+    return out
+
+
+def _iter_eqns(jaxpr):
+    """All eqns of a (closed) jaxpr, recursively, in traversal order."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            yield eqn
+            stack.extend(_sub_jaxprs(eqn))
+
+
+def census(jaxpr) -> Dict[str, int]:
+    """Primitive-name → eqn count over the whole (nested) jaxpr."""
+    return dict(Counter(e.primitive.name for e in _iter_eqns(jaxpr)))
+
+
+def _scan_bodies(jaxpr) -> List[Tuple[int, Dict[str, int]]]:
+    """(static length, body census) of every scan eqn in the jaxpr."""
+    out = []
+    for eqn in _iter_eqns(getattr(jaxpr, "jaxpr", jaxpr)):
+        if eqn.primitive.name == "scan":
+            body = eqn.params["jaxpr"]
+            out.append((int(eqn.params["length"]),
+                        dict(Counter(e.primitive.name
+                                     for e in _iter_eqns(body)))))
+    return out
+
+
+def _aval_bytes(avals) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in avals if hasattr(a, "shape"))
+
+
+def _collective_bytes(jaxpr) -> Dict[str, int]:
+    """Measured operand bytes of each collective, one traversal of the
+    (per-shard) jaxpr.  Eqns inside a scan body are counted once — the
+    per-run total multiplies by the scan length downstream."""
+    out: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for eqn in _iter_eqns(getattr(jaxpr, "jaxpr", jaxpr)):
+        if eqn.primitive.name in out:
+            out[eqn.primitive.name] += _aval_bytes(
+                v.aval for v in eqn.invars)
+    return out
+
+
+# ----------------------------------------------------------------------
+# static Phase 3 cost model (mirrors repro.core.phase3 without running it)
+# ----------------------------------------------------------------------
+def _phase3_block_default() -> int:
+    """Phase 3's kernel block size, read off its signature so the model
+    can't drift from the code."""
+    from ..core.phase3 import phase3_device
+
+    return int(inspect.signature(phase3_device).parameters["block"].default)
+
+
+def _doubling_rounds(n: int) -> int:
+    """Pointer-doubling rounds both kernels run on an n-entry table."""
+    return int(math.ceil(math.log2(max(2, n)))) + 1
+
+
+def pallas_cost_model(e_cap: int, batch: Optional[int]) -> Dict[str, Any]:
+    """Static Pallas cost of one fused run: which doubling loops take the
+    kernel path, their VMEM footprint, and the resulting ``pallas_call``
+    eqn count.  Mirrors the gates in ``repro.core.phase3``: the CC loop
+    keeps 2 resident tables, list-rank keeps 3, both gated by
+    ``resolve_interpret(None) or fits_resident_vmem(...)``."""
+    from ..kernels.pointer_double import (VMEM_CORE_BYTES,
+                                          VMEM_TABLE_BYTES,
+                                          fits_resident_vmem,
+                                          resident_table_bytes,
+                                          resolve_interpret)
+
+    b = int(batch or 1)
+    n_stubs = 2 * e_cap
+    block = _phase3_block_default()
+    n_pad = n_stubs + (-n_stubs) % block
+    rounds = _doubling_rounds(n_stubs)
+    interp = resolve_interpret(None)
+
+    loops = {}
+    for name, n_tables in (("cc", 2), ("rank", 3)):
+        resident = resident_table_bytes(n_pad, n_tables, batch=b)
+        fits = fits_resident_vmem(n_pad, n_tables, batch=b)
+        # independent re-derivation of the gate from the block specs —
+        # must agree with the runtime helper (asserted by the audit)
+        model_fits = resident <= VMEM_TABLE_BYTES
+        # peak on-chip: resident tables + double-buffered query/output
+        # block tiles (n_tables in + n_tables out, itemsize 4)
+        peak = resident + 2 * (2 * n_tables) * min(block, n_pad) * 4
+        loops[name] = {
+            "n_tables": n_tables,
+            "rounds": rounds,
+            "resident_bytes": int(resident),
+            "peak_vmem_bytes": int(peak),
+            "fits_resident_vmem": bool(fits),
+            "model_fits": bool(model_fits),
+            "uses_kernel": bool(interp or fits),
+            "gather_flops": int(rounds * n_pad * n_tables * b),
+        }
+    return {
+        "n_stubs": n_stubs,
+        "padded": n_pad,
+        "block": block,
+        "interpret": bool(interp),
+        "vmem_table_budget": int(VMEM_TABLE_BYTES),
+        "vmem_core_budget": int(VMEM_CORE_BYTES),
+        "loops": loops,
+        "expected_pallas_calls": sum(
+            lp["rounds"] for lp in loops.values() if lp["uses_kernel"]),
+    }
+
+
+def expected_pallas_calls(e_cap: int, batch: Optional[int] = None) -> int:
+    return pallas_cost_model(e_cap, batch)["expected_pallas_calls"]
+
+
+# ----------------------------------------------------------------------
+# per-program audit
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ProgramAudit:
+    """Audit verdict for one traced ``(bucket, width)`` fused program."""
+
+    e_cap: int
+    n_levels: int
+    n_parts: int
+    batch: Optional[int]
+    census: Dict[str, int]
+    budget: Dict[str, int]
+    scans: List[Tuple[int, Dict[str, int]]]
+    cost: Dict[str, Any]
+    violations: List[str]
+    donated_marker: Optional[bool] = None   # one-shot lowering donates
+    resident_marker: Optional[bool] = None  # cached lowering must NOT
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        return d
+
+
+def _example_args(eng, pg, batch: Optional[int]):
+    """Host-side example inputs shaped exactly like the serving path's
+    (state [n,·] / anc [H,n] / sv [2E], batched: state [n,B,·],
+    anc [B,H,n], sv [B,2E])."""
+    import jax
+
+    state, anc = eng.load(pg, device=False)
+    sv = eng._stub_vertex(pg)
+    if batch is None:
+        return anc, state, sv
+    b = int(batch)
+    state_b = jax.tree.map(lambda x: np.stack([x] * b, axis=1), state)
+    return np.stack([anc] * b), state_b, np.stack([sv] * b)
+
+
+def audit_program(eng, pg, e_cap: int, batch: Optional[int] = None,
+                  check_donation: bool = False) -> ProgramAudit:
+    """Trace one fused program and audit it against the static schedule.
+
+    ``eng`` must be a bare :class:`DistributedEngine` for the bucket (its
+    trace probes fire during ``make_jaxpr``, so pass one without solver
+    accounting hooks).  ``check_donation`` additionally lowers the
+    donated one-shot variant (single-width only) and checks the
+    ``jax.buffer_donor`` markers both ways.
+    """
+    import jax
+
+    from ..core.engine import fused_collective_budget
+
+    budget = fused_collective_budget(eng.n_levels)
+    args = _example_args(eng, pg, batch)
+    fn = eng.make_fused(e_cap, batch=batch)
+    closed = jax.make_jaxpr(fn)(*args)
+
+    cen = census(closed)
+    scans = _scan_bodies(closed)
+    cost = pallas_cost_model(e_cap, batch)
+    v: List[str] = []
+
+    def want(prim: str, n: int) -> None:
+        got = cen.get(prim, 0)
+        if got != n:
+            v.append(f"{prim}: traced {got} eqn(s), schedule budgets {n}")
+
+    for prim in COLLECTIVES:
+        want(prim, budget.get(prim, 0))
+
+    # every all_to_all must sit inside exactly one scan of length n_levels
+    level_scans = [(ln, body) for ln, body in scans
+                   if any(body.get(c, 0) for c in COLLECTIVES)]
+    if len(level_scans) != 1:
+        v.append(f"expected exactly 1 collective-bearing scan (the level "
+                 f"scan), found {len(level_scans)}")
+    else:
+        length, body = level_scans[0]
+        if length != eng.n_levels:
+            v.append(f"level scan length {length} != bucket n_levels "
+                     f"{eng.n_levels}")
+        if body.get("all_to_all", 0) != budget["all_to_all"]:
+            v.append(f"level-scan body has {body.get('all_to_all', 0)} "
+                     f"all_to_all, budget {budget['all_to_all']}")
+        if body.get("all_gather", 0):
+            v.append("all_gather inside the level scan (must follow it)")
+
+    host_hits = sorted(p for p in cen if p in HOST_SYNC_PRIMS
+                       or "callback" in p)
+    if host_hits:
+        v.append(f"host-sync primitives in fused body: {host_hits}")
+
+    got_pallas = cen.get("pallas_call", 0)
+    if got_pallas != cost["expected_pallas_calls"]:
+        v.append(f"pallas_call: traced {got_pallas}, cost model expects "
+                 f"{cost['expected_pallas_calls']} "
+                 f"(rounds x kernel-gated loops)")
+    for name, lp in cost["loops"].items():
+        if lp["fits_resident_vmem"] != lp["model_fits"]:
+            v.append(f"{name}: block-spec cost model "
+                     f"({lp['resident_bytes']}B resident) disagrees with "
+                     f"fits_resident_vmem gate")
+        if lp["uses_kernel"] and not cost["interpret"] and \
+                lp["peak_vmem_bytes"] > cost["vmem_core_budget"]:
+            v.append(f"{name}: peak VMEM {lp['peak_vmem_bytes']}B exceeds "
+                     f"core budget {cost['vmem_core_budget']}B")
+
+    # measured bytes moved (per shard, per scan iteration for scanned
+    # collectives) + caps-derived closed form for the report
+    measured = _collective_bytes(closed)
+    b = int(batch or 1)
+    caps, n = eng.caps, eng.n
+    lanes = {
+        "park": (8, caps.ship_cap),
+        "open": (6, caps.open_ship_cap or caps.open_cap),
+        "touch": (7, caps.touch_ship_cap or caps.touch_cap),
+        "mate": (3, caps.mate_ship_cap or 2 * caps.pair_cap()),
+    }
+    modeled = {g: fields * n * lane * 4 * b
+               for g, (fields, lane) in lanes.items()}
+    cost["bytes"] = {
+        "measured_per_shard": measured,
+        "a2a_per_level_modeled": modeled,
+        "a2a_run_total_modeled": sum(modeled.values()) * eng.n_levels * n,
+    }
+    # the ladder_rounds budgets bounding the straggler while-loops of the
+    # traced body (splice vote rotations + Phase 3 pivot splice)
+    cost["round_budgets"] = {
+        "splice_rounds": caps.splice_rounds,
+        "phase3_rounds": caps.phase3_rounds,
+        "while_eqns_traced": cen.get("while", 0),
+    }
+
+    donated = resident = None
+    if check_donation and batch is None:
+        resident = DONOR_MARK in fn.lower(*args).as_text()
+        if resident:
+            v.append("cached program lowers with donated buffers — reused "
+                     "uploads would be invalidated")
+        one_shot = eng.make_fused(e_cap, donate=True)
+        donated = DONOR_MARK in one_shot.lower(*args).as_text()
+        if not donated:
+            v.append("one-shot program lowers without buffer donation "
+                     "(donate_argnums not applied)")
+
+    return ProgramAudit(
+        e_cap=e_cap, n_levels=eng.n_levels, n_parts=eng.n, batch=batch,
+        census=cen, budget=budget, scans=scans, cost=cost, violations=v,
+        donated_marker=donated, resident_marker=resident,
+    )
+
+
+# ----------------------------------------------------------------------
+# whole-bucket audit (what prewarm would compile)
+# ----------------------------------------------------------------------
+def audit_graph(solver, graph, widths: Optional[Sequence[int]] = None,
+                check_donation: bool = True) -> Dict[str, Any]:
+    """Audit every ``(bucket, width)`` program of ``graph``'s bucket.
+
+    ``widths`` defaults to the solver's ``width_ladder`` — the same set
+    :meth:`EulerSolver.prewarm` compiles.  Builds a bare engine for the
+    bucket (same caps/levels/flags as the solver's, minus the accounting
+    probes) so auditing never perturbs ``cache_stats``.
+    """
+    import jax
+
+    from ..core.engine import DistributedEngine
+
+    pg, tree, key = solver._prepare(graph, None)
+    e_cap, n_parts, n_levels, caps = key
+    eng = DistributedEngine(
+        solver.mesh, tuple(solver.mesh.axis_names), caps, n_levels,
+        remote_dedup=solver.remote_dedup,
+        deferred_transfer=solver.deferred_transfer,
+    )
+    widths = solver.width_ladder if widths is None else widths
+    programs = []
+    for w in sorted({int(w) for w in widths}):
+        batch = None if w == 1 else w
+        programs.append(audit_program(
+            eng, pg, e_cap, batch=batch,
+            check_donation=check_donation and batch is None))
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "bucket": {
+            "e_cap": e_cap, "n_parts": n_parts, "n_levels": n_levels,
+            "caps": dataclasses.asdict(caps),
+            "tree_height": tree.height,
+        },
+        "programs": [p.to_dict() for p in programs],
+        "ok": all(p.ok for p in programs),
+    }

@@ -45,6 +45,10 @@ class CheckpointManager:
         meta = {"step": int(step), "keys": sorted(flat),
                 "extra": extra or {}}
         self.wait()
+        # thread-contract: daemon (a half-written .tmp-<step> dir is
+        # discarded on restart, so dying with the interpreter is safe);
+        # joined by wait() before the next save and by callers that need
+        # the checkpoint durable (blocking=True / final save).
         self._thread = threading.Thread(
             target=self._write, args=(step, flat, meta), daemon=True
         )

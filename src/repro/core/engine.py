@@ -200,13 +200,17 @@ class PendingRun:
             circuit, mate, ok3 = circuit[None], mate[None], ok3[None]
             flags, metrics = flags[:, None], metrics[:, None]
         # circuit [B, E], mate [B, 2E], flags/metrics [n, B, L, 4], ok3 [B]
-        assert flags.all(), (
-            f"convergence/capacity flags failed: {flags.all((0, 2, 3))}"
-        )
-        assert ok3.all(), "Phase 3 pivot splice failed to converge"
-        assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
+        if not flags.all():
+            raise RuntimeError(
+                f"convergence/capacity flags failed: {flags.all((0, 2, 3))}"
+            )
+        if not ok3.all():
+            raise RuntimeError("Phase 3 pivot splice failed to converge")
+        if not (mate >= 0).all():
+            raise RuntimeError(f"{(mate < 0).sum()} stubs unmated")
         circuit = circuit.astype(np.int64)
-        assert (circuit >= 0).all(), "circuit emission left gaps"
+        if not (circuit >= 0).all():
+            raise RuntimeError("circuit emission left gaps")
         n_levels = self.engine.n_levels
         results = []
         for b, pg in enumerate(self.pgs):
@@ -224,6 +228,42 @@ class PendingRun:
             ))
         self._results = results
         return results
+
+
+#: Field counts behind the fused program's collective schedule: each table
+#: group ships every field (plus its lane mask) through its own
+#: ``all_to_all`` per superstep, and the mate route adds (s, v, mask).
+#: Derived from ``EngineState`` so the budget tracks the state layout.
+_SHIP_GROUPS = {
+    "park": sum(f.startswith("pk_") for f in EngineState._fields),   # 8
+    "open": sum(f.startswith("op_") for f in EngineState._fields),   # 6
+    "touch": sum(f.startswith("tc_") for f in EngineState._fields),  # 7
+    "mate": 3,                                                       # s, v, m
+}
+
+
+def fused_collective_budget(n_levels: int) -> dict:
+    """The fused program's static collective schedule (DESIGN.md §4/§10).
+
+    Per level-scan body: one ``all_to_all`` per shipped field per table
+    group (``_SHIP_GROUPS``); after the scan, ONE ``all_gather`` collects
+    the mate shards for the replicated device Phase 3.  Nothing else may
+    communicate — ``repro.analysis.jaxpr_audit`` walks the compiled jaxpr
+    and fails the audit gate on any deviation, so an accidental collective
+    (or a host callback standing in for one) is caught before it runs.
+
+    Returns static eqn counts plus the dynamic per-run totals implied by
+    the ``n_levels``-length scan.
+    """
+    per_level = sum(_SHIP_GROUPS.values())
+    return {
+        "all_to_all": per_level,          # eqns inside the level-scan body
+        "all_gather": 1,                  # eqns outside the scan
+        "psum": 0,
+        "ppermute": 0,
+        "scan_length": n_levels,
+        "dynamic_all_to_all": per_level * n_levels,
+    }
 
 
 def build_anc_table(tree: MergeTree, n: int) -> np.ndarray:
@@ -427,7 +467,11 @@ class DistributedEngine:
         batched path stacks B of them host-side first and ships each
         field with ONE transfer, instead of stacking device arrays
         (which would dispatch hundreds of tiny device ops per batch)."""
-        assert pg.num_parts == self.n, (pg.num_parts, self.n)
+        if pg.num_parts != self.n:
+            raise ValueError(
+                f"graph partitioned into {pg.num_parts} parts, but this "
+                f"engine's mesh has {self.n} devices"
+            )
         tree, act, la, cut_ids, anc_table = self.plan(pg)
         self.tree = tree
         # §9 level ladder: the engine may run more supersteps than the
@@ -436,7 +480,11 @@ class DistributedEngine:
         # everything to the root partition, ship nothing, and pair
         # nothing, so they are byte-transparent no-ops.
         rows = max(1, self.n_levels - 1)
-        assert self.n_levels >= tree.height + 1, (self.n_levels, tree.height)
+        if self.n_levels < tree.height + 1:
+            raise ValueError(
+                f"engine compiled for {self.n_levels} supersteps but the "
+                f"merge tree needs {tree.height + 1}"
+            )
         if anc_table.shape[0] < rows:
             anc_table = np.concatenate([
                 anc_table,
@@ -457,7 +505,11 @@ class DistributedEngine:
         for p in pg.parts:
             eids = p.local_eids
             k = len(eids)
-            assert k <= c.edge_cap
+            if k > c.edge_cap:
+                raise ValueError(
+                    f"partition {p.pid} holds {k} local edges, over the "
+                    f"edge_cap of {c.edge_cap}; resize the caps"
+                )
             le["eid"][p.pid, :k] = eids
             le["u"][p.pid, :k] = g.edge_u[eids]
             le["v"][p.pid, :k] = g.edge_v[eids]
@@ -474,8 +526,8 @@ class DistributedEngine:
             idx = np.arange(len(ks))
             seg0 = np.where(np.r_[True, ks[1:] != ks[:-1]], idx, 0)
             pos = idx - np.maximum.accumulate(seg0)
-            assert int(pos.max(initial=0)) < c.park_cap, \
-                "park_cap overflow at load"
+            if int(pos.max(initial=0)) >= c.park_cap:
+                raise ValueError("park_cap overflow at load")
             pk["eid"][ks, pos] = es
             pk["u"][ks, pos] = g.edge_u[es]
             pk["v"][ks, pos] = g.edge_v[es]
@@ -957,7 +1009,9 @@ class DistributedEngine:
             all_flags.append(np.asarray(out.flags))
             metrics.append(np.asarray(out.metrics))
         flags = np.concatenate(all_flags, 0)
-        assert flags.all(), f"convergence/capacity flags failed: {flags.all(0)}"
+        if not flags.all():
+            raise RuntimeError(
+                f"convergence/capacity flags failed: {flags.all(0)}")
 
         # Phase 3: replay logs (level order; later writes win), then the
         # same device Phase 3 program the fused path uses.
@@ -966,13 +1020,16 @@ class DistributedEngine:
             keep = (s1 < 2 * E) & (s2 < 2 * E)
             mate[s1[keep]] = s2[keep]
             mate[s2[keep]] = s1[keep]
-        assert (mate >= 0).all(), f"{(mate < 0).sum()} stubs unmated"
+        if not (mate >= 0).all():
+            raise RuntimeError(f"{(mate < 0).sum()} stubs unmated")
         circuit_j, mate2_j, ok3 = self._phase3_prog()(
             jnp.asarray(mate, dtype=I32), jnp.asarray(sv, dtype=I32)
         )
-        assert bool(ok3), "Phase 3 pivot splice failed to converge"
+        if not bool(ok3):
+            raise RuntimeError("Phase 3 pivot splice failed to converge")
         circuit = np.asarray(circuit_j).astype(np.int64)
-        assert (circuit >= 0).all(), "circuit emission left gaps"
+        if not (circuit >= 0).all():
+            raise RuntimeError("circuit emission left gaps")
         return EulerResult(
             circuit=circuit, mate=np.asarray(mate2_j).astype(np.int64),
             tree=self.tree, levels=EulerResult.levels_from_metrics(metrics),
@@ -994,7 +1051,8 @@ class DistributedEngine:
         Batched execution is fused-only; the eager oracle stays per-graph.
         """
         t0 = time.perf_counter()
-        assert pgs, "empty batch"
+        if not pgs:
+            raise ValueError("empty batch")
         E = pgs[0].graph.num_edges
         B = len(pgs)
         bkey = tuple(id(pg) for pg in pgs)
@@ -1006,8 +1064,10 @@ class DistributedEngine:
         else:
             states, ancs, svs, trees = [], [], [], []
             for pg in pgs:
-                assert pg.graph.num_edges == E, \
-                    f"mixed edge counts in batch: {pg.graph.num_edges} != {E}"
+                if pg.graph.num_edges != E:
+                    raise ValueError(
+                        f"mixed edge counts in batch: "
+                        f"{pg.graph.num_edges} != {E}")
                 ent = self._load_cached(pg)
                 states.append(ent["state"])
                 ancs.append(ent["anc"])

@@ -43,9 +43,16 @@ class Graph:
         return bool(np.all(self.degrees() % 2 == 0))
 
     def validate(self) -> None:
-        assert self.edge_u.shape == self.edge_v.shape
-        assert self.edge_u.min(initial=0) >= 0
-        assert max(self.edge_u.max(initial=0), self.edge_v.max(initial=0)) < self.num_vertices
+        if self.edge_u.shape != self.edge_v.shape:
+            raise ValueError(
+                f"edge endpoint arrays disagree: {self.edge_u.shape} vs "
+                f"{self.edge_v.shape}")
+        if self.edge_u.min(initial=0) < 0:
+            raise ValueError("negative vertex id in edge_u")
+        if max(self.edge_u.max(initial=0),
+               self.edge_v.max(initial=0)) >= self.num_vertices:
+            raise ValueError(
+                f"edge endpoint exceeds num_vertices={self.num_vertices}")
 
 
 @dataclasses.dataclass

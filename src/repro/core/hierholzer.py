@@ -13,6 +13,15 @@ import numpy as np
 from .graph import Graph
 
 
+class InvalidCircuitError(AssertionError):
+    """A claimed Euler circuit failed validation.
+
+    Subclasses ``AssertionError`` for back-compat with callers that catch
+    validation failures from the historical ``assert``-based checker, but
+    is raised explicitly so validation survives ``python -O``.
+    """
+
+
 def hierholzer_circuit(graph: Graph, start: Optional[int] = None) -> np.ndarray:
     """Return an Euler circuit as an array of *stub* ids.
 
@@ -75,15 +84,19 @@ def hierholzer_circuit(graph: Graph, start: Optional[int] = None) -> np.ndarray:
 
 
 def validate_circuit(graph: Graph, circuit_stubs: np.ndarray) -> None:
-    """Assert ``circuit_stubs`` is an Euler circuit of ``graph``.
+    """Check that ``circuit_stubs`` is an Euler circuit of ``graph``;
+    raises :class:`InvalidCircuitError` otherwise.
 
     Checks: every edge exactly once; consecutive edges share the junction
     vertex; the walk is closed.
     """
     E = graph.num_edges
-    assert circuit_stubs.shape == (E,), (circuit_stubs.shape, E)
+    if circuit_stubs.shape != (E,):
+        raise InvalidCircuitError(
+            f"circuit has shape {circuit_stubs.shape}, expected ({E},)")
     eids = circuit_stubs >> 1
-    assert len(np.unique(eids)) == E, "an edge repeats or is missing"
+    if len(np.unique(eids)) != E:
+        raise InvalidCircuitError("an edge repeats or is missing")
 
     stub_vert = np.empty(2 * E, dtype=np.int64)
     stub_vert[0::2] = graph.edge_u
@@ -92,5 +105,8 @@ def validate_circuit(graph: Graph, circuit_stubs: np.ndarray) -> None:
     depart = stub_vert[circuit_stubs ^ 1]        # vertex the walk departs from
     # consecutive link: arrival vertex of step t == departure vertex of t+1
     ok = arrive[:-1] == depart[1:]
-    assert bool(np.all(ok)), f"walk breaks at steps {np.nonzero(~ok)[0][:5]}"
-    assert arrive[-1] == depart[0], "walk is not closed"
+    if not bool(np.all(ok)):
+        raise InvalidCircuitError(
+            f"walk breaks at steps {np.nonzero(~ok)[0][:5]}")
+    if arrive[-1] != depart[0]:
+        raise InvalidCircuitError("walk is not closed")

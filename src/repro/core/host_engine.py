@@ -116,7 +116,8 @@ class HostEngine:
         # Phase 3: final pivot splice from disk bookkeeping, then list-rank.
         valid = self.mate >= 0
         n_unmated = int((~valid).sum())
-        assert n_unmated == 0, f"{n_unmated} stubs left unmated at root"
+        if n_unmated:
+            raise RuntimeError(f"{n_unmated} stubs left unmated at root")
         self.mate = splice_components_np(self.mate, self.stub_vertex, valid)
         circuit = circuit_from_mate_np(self.mate)
         return EulerResult(

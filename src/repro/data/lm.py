@@ -49,6 +49,10 @@ class Prefetcher:
                     item = jax.device_put(item, self.shardings)
                 self.q.put(item)
 
+        # thread-contract: daemon (prefetch holds no external resources;
+        # an in-flight batch is safely abandoned at interpreter exit).
+        # Never joined — consumers signal stop() and the bounded queue
+        # unblocks the worker within one put.
         self.t = threading.Thread(target=worker, daemon=True)
         self.t.start()
 

@@ -244,10 +244,12 @@ def pad_graph(graph: Graph, part_of_vertex: np.ndarray,
     """
     E = graph.num_edges
     k = int(e_cap) - E
-    assert k >= 0, (e_cap, E)
+    if k < 0:
+        raise ValueError(f"e_cap {e_cap} smaller than the graph's {E} edges")
     if k == 0:
         return graph, part_of_vertex
-    assert E > 0, "cannot pad an empty graph"
+    if E == 0:
+        raise ValueError("cannot pad an empty graph")
     anchor = int(graph.edge_u[0])
     V = graph.num_vertices
     if k == 1:

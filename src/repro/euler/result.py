@@ -87,13 +87,14 @@ class EulerResult:
         >>> solve(tri, backend="host", n_parts=1).validate().valid
         True
         """
-        from ..core.hierholzer import validate_circuit
+        from ..core.hierholzer import InvalidCircuitError, validate_circuit
 
-        assert self.graph is not None, "result carries no graph to validate"
+        if self.graph is None:
+            raise ValueError("result carries no graph to validate")
         try:
             validate_circuit(self.graph, np.asarray(self.circuit,
                                                     dtype=np.int64))
-        except AssertionError:
+        except InvalidCircuitError:
             self.valid = False
             raise
         self.valid = True

@@ -116,7 +116,8 @@ class PendingSolve:
 
     def result(self) -> EulerResult:
         """Single-solve convenience accessor."""
-        assert len(self._graphs) == 1, "batched solve: use results()"
+        if len(self._graphs) != 1:
+            raise ValueError("batched solve: use results()")
         return self.results()[0]
 
 
@@ -201,7 +202,8 @@ class EulerSolver:
         program_cache_max: int = 32,
         device_resident: bool = True,
     ):
-        assert backend in ("device", "host"), backend
+        if backend not in ("device", "host"):
+            raise ValueError(f"backend must be 'device' or 'host': {backend}")
         self.backend = backend
         self.fused = fused
         self.remote_dedup = remote_dedup
@@ -344,10 +346,16 @@ class EulerSolver:
         return key
 
     def _on_trace(self):
-        self.cache_stats.traces += 1
+        # fires from inside jit tracing on whichever thread dispatched the
+        # program — the eager oracle path dispatches outside the session
+        # lock, so the counter bump must take it (RLock: re-entrant from
+        # the locked fused paths)
+        with self._lock:
+            self.cache_stats.traces += 1
 
     def _on_upload(self):
-        self.cache_stats.state_uploads += 1
+        with self._lock:
+            self.cache_stats.state_uploads += 1
 
     def _engine_for(self, key: BucketKey) -> DistributedEngine:
         """The (cached) engine owning this bucket's compiled programs."""
@@ -541,7 +549,8 @@ class EulerSolver:
         same-bucket requirement, same byte-identical results from
         ``results()``)."""
         graphs = list(graphs)
-        assert graphs, "empty batch"
+        if not graphs:
+            raise ValueError("empty batch")
         if self.backend != "device":
             raise ValueError("solve_batch_async is a device-backend path")
         if len(graphs) == 1:

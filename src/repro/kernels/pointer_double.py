@@ -39,7 +39,24 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
 
 # ~12 MB of VMEM for resident tables (16 MB/core minus query/output
 # blocks and double-buffering headroom).
-_VMEM_TABLE_BYTES = 12 * 2**20
+VMEM_TABLE_BYTES = 12 * 2**20
+_VMEM_TABLE_BYTES = VMEM_TABLE_BYTES     # back-compat alias
+
+#: Whole-core VMEM a compiled kernel instance may assume (the resident
+#: budget above is this minus block streaming headroom); the static cost
+#: model in ``repro.analysis.jaxpr_audit`` checks its peak estimate —
+#: resident tables plus double-buffered query/output blocks — against it.
+VMEM_CORE_BYTES = 16 * 2**20
+
+
+def resident_table_bytes(n: int, n_tables: int, itemsize: int = 4,
+                         batch: int = 1) -> int:
+    """VMEM the kernels' resident jump tables occupy: ``n_tables`` full
+    [n] operand blocks, charged ``min(batch, 2)`` times for vmapped
+    callers (the batch axis becomes a leading grid dimension and
+    double-buffered prefetch can overlap two adjacent batch elements'
+    tables on-chip)."""
+    return n * n_tables * itemsize * min(max(1, batch), 2)
 
 
 def fits_resident_vmem(n: int, n_tables: int, itemsize: int = 4,
@@ -49,13 +66,10 @@ def fits_resident_vmem(n: int, n_tables: int, itemsize: int = 4,
     so callers with unbounded tables (e.g. whole-graph Phase 3) must fall
     back to plain-jnp gathers (HBM-resident, XLA-scheduled) beyond this.
 
-    ``batch`` scales the budget check for vmapped callers (DESIGN.md §8):
-    the batching rule turns the batch axis into a leading grid dimension,
-    and with double-buffered prefetch across grid steps adjacent batch
-    elements' resident tables can overlap in VMEM — so the gate
-    conservatively charges ``min(batch, 2)`` table sets."""
-    return n * n_tables * itemsize * min(max(1, batch), 2) \
-        <= _VMEM_TABLE_BYTES
+    ``batch`` scales the budget check for vmapped callers (DESIGN.md §8)
+    via :func:`resident_table_bytes`."""
+    return resident_table_bytes(n, n_tables, itemsize, batch) \
+        <= VMEM_TABLE_BYTES
 
 
 def _pick_block(n: int, block: int) -> int:

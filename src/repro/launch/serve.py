@@ -68,7 +68,10 @@ class MicroBatcher:
     def __init__(self, solver, max_batch: int = 8,
                  deadline_s: float = 0.010, clock=time.perf_counter,
                  pipeline_depth: int = 2):
-        assert max_batch >= 1 and pipeline_depth >= 0
+        if max_batch < 1 or pipeline_depth < 0:
+            raise ValueError(
+                f"need max_batch >= 1 and pipeline_depth >= 0, got "
+                f"{max_batch}, {pipeline_depth}")
         self.solver = solver
         self.max_batch = max_batch
         self.deadline_s = deadline_s
@@ -274,14 +277,19 @@ def main_euler(argv=None):
     t0 = time.perf_counter()
     if max_batch > 1 and not args.eager and not args.no_prewarm:
         ladder_widths = [w for w in widths if w > 1]
+        # thread-contract: daemon (never blocks interpreter exit; prewarm
+        # holds no external resources and its work is safely abandoned
+        # mid-compile) and joined before the measured loop on this CPU
+        # host — compiles are GIL-bound, so overlapping them with serving
+        # only skews the series.  On a real accelerator, drop the join:
+        # the batcher dispatches only to already-warm widths, so the
+        # ladder may compile behind live traffic (ROADMAP).
         pw = threading.Thread(
             target=lambda: [solver.prewarm(g, ladder_widths)
                             for g in rep.values()],
             name="prewarm", daemon=True)
         pw.start()
-        pw.join()   # CPU CI host: compiles are GIL-bound, so overlapping
-        # them with the measured loop just skews the series; on a real
-        # accelerator drop the join and serve through the warmup.
+        pw.join()
     t_warm = time.perf_counter() - t0
     cs = solver.cache_stats
     print(f"cold pass {t_cold:.2f}s ({cold_thr:.2f} circuits/s); width "
