@@ -62,6 +62,10 @@ LADDER_SERIES = [  # (scale, parts, avg degree, pool, max_batch, passes)
     (5, 8, 4, 16, 4, 3),
 ]
 
+PHASE3_SERIES = [  # (scale, parts) — replicated vs sharded Phase 3
+    (9, 8), (11, 8),
+]
+
 
 def run(series=SERIES, seed=0):
     rows = []
@@ -315,6 +319,57 @@ def run_ladder(series=LADDER_SERIES, seed=0):
     return rows
 
 
+def run_phase3(series=PHASE3_SERIES, seed=0, repeats=3):
+    """Sharded vs replicated Phase 3 (DESIGN.md §11): warm fused
+    wall-clock of the same graph and mesh under all three modes —
+    replicated oracle, sharded with the emission ``all_gather``, and
+    ``gather_circuit=False`` (host-side emission) — next to the audit
+    cost model's per-device Phase 3 table width and state bytes, i.e.
+    the O(2E) → O(2E/n) memory claim the sharding buys.  Circuits are
+    asserted byte-identical across the modes before timing is reported.
+    """
+    from repro.analysis.jaxpr_audit import pallas_cost_model
+
+    rows = []
+    for scale, parts in series:
+        g = eulerian_rmat(scale, avg_degree=5, seed=seed + scale)
+
+        def timed(**opts):
+            solver = EulerSolver(n_parts=parts, partition_seed=seed,
+                                 **opts)
+            res = solver.solve(g)                          # warm/compile
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                res = solver.solve(g)
+                best = min(best, time.perf_counter() - t0)
+            res.validate()
+            return best, res
+
+        t_rep, r_rep = timed(sharded_phase3=False)
+        t_sh, r_sh = timed()
+        t_ng, r_ng = timed(gather_circuit=False)
+        assert np.array_equal(r_rep.circuit, r_sh.circuit)
+        assert np.array_equal(r_rep.circuit, r_ng.circuit)
+        e_cap = r_sh.cache.bucket[0]
+        rep_cost = pallas_cost_model(e_cap, None)
+        sh_cost = pallas_cost_model(e_cap, None, n_parts=parts,
+                                    sharded=True)
+        rows.append({
+            "graph": f"s{scale}/P{parts}",
+            "E_cap": e_cap,
+            "replicated_s": round(t_rep, 3),
+            "sharded_s": round(t_sh, 3),
+            "nogather_s": round(t_ng, 3),
+            "p3_width_rep": rep_cost["phase3_table_width"],
+            "p3_width_sh": sh_cost["phase3_table_width"],
+            "p3_bytes_ratio": round(
+                rep_cost["phase3_state_bytes"]
+                / max(1, sh_cost["phase3_state_bytes"]), 2),
+        })
+    return rows
+
+
 def _print_table(rows):
     if not rows:
         print("  (no rows)")
@@ -338,7 +393,11 @@ def main():
           "B-chunk):")
     batched_rows = run_batched()
     _print_table(batched_rows)
-    return rows + dev_rows + serve_rows + batched_rows
+    print("\nsharded vs replicated Phase 3 (warm wall-clock + per-device "
+          "memory model):")
+    p3_rows = run_phase3()
+    _print_table(p3_rows)
+    return rows + dev_rows + serve_rows + batched_rows + p3_rows
 
 
 if __name__ == "__main__":

@@ -28,10 +28,12 @@ def main():
     if args.quick:
         scaling_series = [(10, 2), (11, 3), (11, 4), (12, 8)]
         batched_series = [(5, 8, 3, (1, 2, 4, 8))]
+        phase3_series = [(9, 8)]
         kw = dict(scale=11, parts=8)
     else:
         scaling_series = bench_scaling.SERIES
         batched_series = bench_scaling.BATCHED_SERIES
+        phase3_series = bench_scaling.PHASE3_SERIES
         kw = dict(scale=14, parts=8)
 
     suites = {
@@ -40,6 +42,7 @@ def main():
         "serving": lambda: bench_scaling.run_serving(),
         "batched": lambda: bench_scaling.run_batched(series=batched_series),
         "ladder": lambda: bench_scaling.run_ladder(),
+        "phase3": lambda: bench_scaling.run_phase3(series=phase3_series),
         "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
                                            parts=kw["parts"]),
         "phase1": lambda: bench_phase1.run(**kw),
@@ -89,6 +92,12 @@ def _summarize(name, res):
                   f"({r['x_vs_pr3']}x vs pr3-sync; steady "
                   f"{r['steady_circuits/s']}), widths {r['widths_used']}, "
                   f"rounds {r['splice_rounds']}/{r['p3_rounds']}")
+    elif name == "phase3":
+        for r in res:
+            print(f"  {r['graph']:>10s}: replicated={r['replicated_s']}s "
+                  f"sharded={r['sharded_s']}s nogather={r['nogather_s']}s "
+                  f"per-device table {r['p3_width_rep']} → "
+                  f"{r['p3_width_sh']} ({r['p3_bytes_ratio']}x less state)")
     elif name == "phase1":
         print(f"  fit over {res['points']} points: R2={res['r2']}")
     elif name == "memory":

@@ -38,6 +38,12 @@ def _parse(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     help="skip the source-tree lint pass")
     ap.add_argument("--no-donation", action="store_true",
                     help="skip the buffer-donation lowering checks")
+    ap.add_argument("--replicated-phase3", action="store_true",
+                    help="audit the replicated Phase 3 oracle path "
+                         "(default: sharded when --parts > 1)")
+    ap.add_argument("--no-gather-circuit", action="store_true",
+                    help="audit the gather_circuit=False variant "
+                         "(sharded rank triple, host-side emission)")
     return ap.parse_args(argv)
 
 
@@ -59,7 +65,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     widths = [int(w) for w in args.widths.split(",") if w]
     graph = eulerian_rmat(args.scale, avg_degree=args.avg_degree,
                           seed=args.seed)
-    solver = EulerSolver(n_parts=args.parts, width_ladder=widths or (1,))
+    solver = EulerSolver(
+        n_parts=args.parts, width_ladder=widths or (1,),
+        sharded_phase3=False if args.replicated_phase3 else None,
+        gather_circuit=not args.no_gather_circuit)
     report = audit_graph(solver, graph, widths=widths,
                          check_donation=not args.no_donation)
 
@@ -79,6 +88,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         plc = prog["census"].get("pallas_call", 0)
         print(f"  [{state}] {tag}: {a2a} all_to_all / "
               f"{prog['census'].get('all_gather', 0)} all_gather / "
+              f"{prog['census'].get('ppermute', 0)} ppermute / "
               f"{plc} pallas_call "
               f"(scan length {prog['n_levels']})")
         for viol in prog["violations"]:

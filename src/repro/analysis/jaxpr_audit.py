@@ -2,15 +2,19 @@
 
 The engine publishes its collective schedule statically
 (:func:`repro.core.engine.fused_collective_budget`): per scan level, one
-``all_to_all`` per shipped field per table group; after the scan, exactly
-one ``all_gather`` for the replicated device Phase 3; nothing else.  This
-module traces each ``(bucket, batch-width)`` program the solver would
-cache, walks the closed jaxpr, and fails if the compiled program
-communicates — or syncs with the host — anywhere the schedule says it
-must not:
+``all_to_all`` per shipped field per table group; after the scan, either
+exactly one ``all_gather`` for the replicated device Phase 3, or — under
+``sharded_phase3`` (DESIGN.md §11) — the ring schedule of
+:func:`repro.core.phase3.sharded_phase3_schedule` (``2R+7`` ``ppermute``
+eqns, 2 ``psum``, and at most one emission ``all_gather``, elided when
+``gather_circuit=False``); nothing else.  This module traces each
+``(bucket, batch-width)`` program the solver would cache, walks the
+closed jaxpr, and fails if the compiled program communicates — or syncs
+with the host — anywhere the schedule says it must not:
 
   * collective census == budget, with every ``all_to_all`` inside exactly
-    ONE ``lax.scan`` whose static length equals the bucket's ``n_levels``;
+    ONE ``lax.scan`` whose static length equals the bucket's ``n_levels``
+    (the sharded rings lower to ppermute-only scans and gather nothing);
   * zero host callbacks / infeed / outfeed in the fused body (a stray
     ``debug_print`` or ``pure_callback`` re-introduces per-level host
     syncs and silently serializes the BSP pipeline);
@@ -129,40 +133,71 @@ def _phase3_block_default() -> int:
     return int(inspect.signature(phase3_device).parameters["block"].default)
 
 
+def _sharded_block_default() -> int:
+    """Sharded Phase 3's kernel block size, read off its signature."""
+    from ..core.phase3 import phase3_sharded
+
+    return int(inspect.signature(phase3_sharded).parameters["block"].default)
+
+
 def _doubling_rounds(n: int) -> int:
     """Pointer-doubling rounds both kernels run on an n-entry table."""
     return int(math.ceil(math.log2(max(2, n)))) + 1
 
 
-def pallas_cost_model(e_cap: int, batch: Optional[int]) -> Dict[str, Any]:
+def pallas_cost_model(e_cap: int, batch: Optional[int],
+                      n_parts: Optional[int] = None,
+                      sharded: bool = False,
+                      p3v_cap: int = 0) -> Dict[str, Any]:
     """Static Pallas cost of one fused run: which doubling loops take the
     kernel path, their VMEM footprint, and the resulting ``pallas_call``
     eqn count.  Mirrors the gates in ``repro.core.phase3``: the CC loop
     keeps 2 resident tables, list-rank keeps 3, both gated by
-    ``resolve_interpret(None) or fits_resident_vmem(...)``."""
+    ``resolve_interpret(None) or fits_resident_vmem(...)``.
+
+    With ``sharded=True`` (needs ``n_parts``) the model follows the
+    sharded Phase 3 (DESIGN.md §11): tables are the per-device shard
+    (width ``S = shard_width(e_cap, n_parts)``, never padded — the shard
+    kernels shrink the block to divide S), the round count covers the
+    full ``n_parts*S`` stub space, and ``phase3_state_bytes`` is the
+    per-device persistent working set — the O(2E/n) quantity the memory
+    regression test pins (vs the replicated model's O(2E))."""
     from ..kernels.pointer_double import (VMEM_CORE_BYTES,
-                                          VMEM_TABLE_BYTES,
+                                          VMEM_TABLE_BYTES, _pick_block,
                                           fits_resident_vmem,
                                           resident_table_bytes,
                                           resolve_interpret)
 
     b = int(batch or 1)
     n_stubs = 2 * e_cap
-    block = _phase3_block_default()
-    n_pad = n_stubs + (-n_stubs) % block
-    rounds = _doubling_rounds(n_stubs)
     interp = resolve_interpret(None)
+    if sharded:
+        if not n_parts:
+            raise ValueError("sharded cost model needs n_parts")
+        from ..core.phase3 import shard_width
+
+        width = shard_width(e_cap, n_parts)
+        block = _sharded_block_default()
+        blk = _pick_block(width, block)
+        n_pad = width                    # shard tables are exactly S wide
+        rounds = _doubling_rounds(n_parts * width)
+    else:
+        block = _phase3_block_default()
+        n_pad = n_stubs + (-n_stubs) % block
+        width = n_pad
+        blk = min(block, n_pad)
+        rounds = _doubling_rounds(n_stubs)
 
     loops = {}
     for name, n_tables in (("cc", 2), ("rank", 3)):
-        resident = resident_table_bytes(n_pad, n_tables, batch=b)
-        fits = fits_resident_vmem(n_pad, n_tables, batch=b)
+        resident = resident_table_bytes(width, n_tables, batch=b)
+        fits = fits_resident_vmem(width, n_tables, batch=b)
         # independent re-derivation of the gate from the block specs —
         # must agree with the runtime helper (asserted by the audit)
         model_fits = resident <= VMEM_TABLE_BYTES
         # peak on-chip: resident tables + double-buffered query/output
         # block tiles (n_tables in + n_tables out, itemsize 4)
-        peak = resident + 2 * (2 * n_tables) * min(block, n_pad) * 4
+        peak = resident + 2 * (2 * n_tables) * blk * 4
         loops[name] = {
             "n_tables": n_tables,
             "rounds": rounds,
@@ -171,12 +206,23 @@ def pallas_cost_model(e_cap: int, batch: Optional[int]) -> Dict[str, Any]:
             "fits_resident_vmem": bool(fits),
             "model_fits": bool(model_fits),
             "uses_kernel": bool(interp or fits),
-            "gather_flops": int(rounds * n_pad * n_tables * b),
+            "gather_flops": int(rounds * width * n_tables * b),
         }
+    # per-device persistent Phase 3 working set, int32 throughout: the
+    # six live arrays of CC + rank (mate, nxt/ptr, lab/dist, reach and
+    # the two ring answer buffers), plus — sharded only — the splice
+    # vertex-record table [4, p3v_cap+1] at each vertex owner
+    state_bytes = 6 * width * 4 * b
+    if sharded:
+        state_bytes += 4 * (int(p3v_cap) + 1) * 4 * b
     return {
         "n_stubs": n_stubs,
         "padded": n_pad,
         "block": block,
+        "sharded": bool(sharded),
+        "n_parts": int(n_parts) if n_parts else None,
+        "phase3_table_width": int(width),
+        "phase3_state_bytes": int(state_bytes),
         "interpret": bool(interp),
         "vmem_table_budget": int(VMEM_TABLE_BYTES),
         "vmem_core_budget": int(VMEM_CORE_BYTES),
@@ -186,8 +232,11 @@ def pallas_cost_model(e_cap: int, batch: Optional[int]) -> Dict[str, Any]:
     }
 
 
-def expected_pallas_calls(e_cap: int, batch: Optional[int] = None) -> int:
-    return pallas_cost_model(e_cap, batch)["expected_pallas_calls"]
+def expected_pallas_calls(e_cap: int, batch: Optional[int] = None,
+                          n_parts: Optional[int] = None,
+                          sharded: bool = False) -> int:
+    return pallas_cost_model(e_cap, batch, n_parts=n_parts,
+                             sharded=sharded)["expected_pallas_calls"]
 
 
 # ----------------------------------------------------------------------
@@ -226,7 +275,9 @@ def _example_args(eng, pg, batch: Optional[int]):
     import jax
 
     state, anc = eng.load(pg, device=False)
-    sv = eng._stub_vertex(pg)
+    # _pad_sv widens [2E] to [n*S] for the sharded Phase 3 (identity when
+    # replicated) — exactly what the solver's upload sites do
+    sv = eng._pad_sv(eng._stub_vertex(pg))
     if batch is None:
         return anc, state, sv
     b = int(batch)
@@ -248,14 +299,23 @@ def audit_program(eng, pg, e_cap: int, batch: Optional[int] = None,
 
     from ..core.engine import fused_collective_budget
 
-    budget = fused_collective_budget(eng.n_levels)
+    sharded = bool(getattr(eng, "sharded_phase3", False))
+    if sharded:
+        budget = fused_collective_budget(
+            eng.n_levels, num_edges=e_cap, n_parts=eng.n,
+            sharded_phase3=True, gather_circuit=eng.gather_circuit)
+    else:
+        # keep the bare positional call for replicated engines — the
+        # published-schedule contract (and its live gate) is keyed on it
+        budget = fused_collective_budget(eng.n_levels)
     args = _example_args(eng, pg, batch)
     fn = eng.make_fused(e_cap, batch=batch)
     closed = jax.make_jaxpr(fn)(*args)
 
     cen = census(closed)
     scans = _scan_bodies(closed)
-    cost = pallas_cost_model(e_cap, batch)
+    cost = pallas_cost_model(e_cap, batch, n_parts=eng.n, sharded=sharded,
+                             p3v_cap=(eng.caps.p3v_cap or e_cap))
     v: List[str] = []
 
     def want(prim: str, n: int) -> None:
@@ -266,11 +326,14 @@ def audit_program(eng, pg, e_cap: int, batch: Optional[int] = None,
     for prim in COLLECTIVES:
         want(prim, budget.get(prim, 0))
 
-    # every all_to_all must sit inside exactly one scan of length n_levels
+    # every all_to_all must sit inside exactly one scan of length
+    # n_levels.  Filter on all_to_all specifically: the sharded Phase 3's
+    # ring fori_loops also lower to scans, but they may carry only
+    # ppermute (DESIGN.md §11) — never a ship or a gather.
     level_scans = [(ln, body) for ln, body in scans
-                   if any(body.get(c, 0) for c in COLLECTIVES)]
+                   if body.get("all_to_all", 0)]
     if len(level_scans) != 1:
-        v.append(f"expected exactly 1 collective-bearing scan (the level "
+        v.append(f"expected exactly 1 all_to_all-bearing scan (the level "
                  f"scan), found {len(level_scans)}")
     else:
         length, body = level_scans[0]
@@ -280,8 +343,9 @@ def audit_program(eng, pg, e_cap: int, batch: Optional[int] = None,
         if body.get("all_to_all", 0) != budget["all_to_all"]:
             v.append(f"level-scan body has {body.get('all_to_all', 0)} "
                      f"all_to_all, budget {budget['all_to_all']}")
-        if body.get("all_gather", 0):
-            v.append("all_gather inside the level scan (must follow it)")
+    if any(body.get("all_gather", 0) for _, body in scans):
+        v.append("all_gather inside a scan body (emission gathers at most "
+                 "once, after the level scan)")
 
     host_hits = sorted(p for p in cen if p in HOST_SYNC_PRIMS
                        or "callback" in p)
@@ -370,6 +434,8 @@ def audit_graph(solver, graph, widths: Optional[Sequence[int]] = None,
         solver.mesh, tuple(solver.mesh.axis_names), caps, n_levels,
         remote_dedup=solver.remote_dedup,
         deferred_transfer=solver.deferred_transfer,
+        sharded_phase3=getattr(solver, "sharded_phase3", False),
+        gather_circuit=getattr(solver, "gather_circuit", True),
     )
     widths = solver.width_ladder if widths is None else widths
     programs = []
@@ -386,6 +452,10 @@ def audit_graph(solver, graph, widths: Optional[Sequence[int]] = None,
             "e_cap": e_cap, "n_parts": n_parts, "n_levels": n_levels,
             "caps": dataclasses.asdict(caps),
             "tree_height": tree.height,
+            "sharded_phase3": bool(getattr(solver, "sharded_phase3",
+                                           False)),
+            "gather_circuit": bool(getattr(solver, "gather_circuit",
+                                           True)),
         },
         "programs": [p.to_dict() for p in programs],
         "ok": all(p.ok for p in programs),

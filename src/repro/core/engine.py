@@ -60,7 +60,8 @@ from .phase1 import (
     phase1_local,
 )
 from .phase2 import MergeTree, generate_merge_tree
-from .phase3 import phase3_device
+from .phase3 import (emit_circuit_np, phase3_device, phase3_sharded,
+                     shard_width, sharded_phase3_schedule)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +82,8 @@ class EngineCaps:
     splice_rounds: int = 12
     phase3_rounds: int = 64   # pivot-splice round budget of device Phase 3
     static_splice: bool = False
+    p3v_cap: int = 0          # sharded Phase 3 per-device vertex-record
+                              # table width (0 → e_cap, the safe bound)
 
     def phase1(self) -> Phase1Caps:
         return Phase1Caps(
@@ -143,7 +146,15 @@ class StepOut(NamedTuple):
 
 
 class FusedOut(NamedTuple):
-    """Everything the fused program returns — fetched in ONE host sync."""
+    """Everything the fused program returns — fetched in ONE host sync.
+
+    Under ``gather_circuit=False`` (sharded Phase 3 without the final
+    ``all_gather``) the program never materializes a replicated circuit:
+    ``circuit`` instead carries the sharded post-rank ``(mate, dist,
+    reach)`` triple ``[n·S, 3]`` and ``mate`` its ``[n·S]`` first column,
+    both assembled host-side by :meth:`PendingRun.wait` (which emits the
+    circuit with the same ordering the device path uses).
+    """
 
     circuit: jnp.ndarray   # [E] arrival stubs in walk order (replicated)
     mate: jnp.ndarray      # [2E] post-splice mate permutation (replicated)
@@ -199,6 +210,19 @@ class PendingRun:
         if self.batch is None:          # unify to batched layouts
             circuit, mate, ok3 = circuit[None], mate[None], ok3[None]
             flags, metrics = flags[:, None], metrics[:, None]
+        if self.engine.sharded_phase3 and not self.engine.gather_circuit:
+            # gather_circuit=False: the program returned the rank triple
+            # still sharded ([B, n·S, 3]); emit host-side with the exact
+            # ordering the on-device emit_circuit uses (stable argsort on
+            # int32 keys), so circuits stay byte-identical (DESIGN.md §11)
+            n_stubs = 2 * self.pgs[0].graph.num_edges
+            packed = circuit[:, :n_stubs]
+            mate = mate[:, :n_stubs]
+            circuit = np.stack([
+                emit_circuit_np(mate[b] >= 0, packed[b, :, 1],
+                                packed[b, :, 2])
+                for b in range(mate.shape[0])
+            ])
         # circuit [B, E], mate [B, 2E], flags/metrics [n, B, L, 4], ok3 [B]
         if not flags.all():
             raise RuntimeError(
@@ -242,21 +266,30 @@ _SHIP_GROUPS = {
 }
 
 
-def fused_collective_budget(n_levels: int) -> dict:
-    """The fused program's static collective schedule (DESIGN.md §4/§10).
+def fused_collective_budget(n_levels: int, num_edges: Optional[int] = None,
+                            n_parts: Optional[int] = None,
+                            sharded_phase3: bool = False,
+                            gather_circuit: bool = True) -> dict:
+    """The fused program's static collective schedule (DESIGN.md §4/§10/§11).
 
     Per level-scan body: one ``all_to_all`` per shipped field per table
-    group (``_SHIP_GROUPS``); after the scan, ONE ``all_gather`` collects
-    the mate shards for the replicated device Phase 3.  Nothing else may
-    communicate — ``repro.analysis.jaxpr_audit`` walks the compiled jaxpr
-    and fails the audit gate on any deviation, so an accidental collective
-    (or a host callback standing in for one) is caught before it runs.
+    group (``_SHIP_GROUPS``).  After the scan, the replicated Phase 3
+    (default) performs ONE ``all_gather`` and nothing else; the *sharded*
+    Phase 3 (``sharded_phase3=True``, needs ``num_edges``/``n_parts``)
+    instead runs the ring schedule of
+    :func:`repro.core.phase3.sharded_phase3_schedule` — ``2R+7``
+    ``ppermute`` ring loops and 2 ``psum`` eqns, with the single
+    ``all_gather`` deferred to circuit emission (and elided entirely
+    under ``gather_circuit=False``).  Nothing else may communicate —
+    ``repro.analysis.jaxpr_audit`` walks the compiled jaxpr and fails the
+    audit gate on any deviation, so an accidental collective (or a host
+    callback standing in for one) is caught before it runs.
 
     Returns static eqn counts plus the dynamic per-run totals implied by
     the ``n_levels``-length scan.
     """
     per_level = sum(_SHIP_GROUPS.values())
-    return {
+    out = {
         "all_to_all": per_level,          # eqns inside the level-scan body
         "all_gather": 1,                  # eqns outside the scan
         "psum": 0,
@@ -264,6 +297,17 @@ def fused_collective_budget(n_levels: int) -> dict:
         "scan_length": n_levels,
         "dynamic_all_to_all": per_level * n_levels,
     }
+    if sharded_phase3:
+        if num_edges is None or n_parts is None:
+            raise ValueError(
+                "sharded_phase3 budget needs num_edges and n_parts")
+        sched = sharded_phase3_schedule(num_edges, n_parts,
+                                        gather_circuit=gather_circuit)
+        out["all_gather"] = sched["all_gather"]
+        out["ppermute"] = sched["ppermute"]
+        out["psum"] = sched["psum"]
+        out["phase3"] = sched
+    return out
 
 
 def build_anc_table(tree: MergeTree, n: int) -> np.ndarray:
@@ -328,6 +372,8 @@ class DistributedEngine:
         deferred_transfer: bool = True,
         on_trace: Optional[Callable[[], None]] = None,
         on_upload: Optional[Callable[[], None]] = None,
+        sharded_phase3: bool = False,
+        gather_circuit: bool = True,
     ):
         self.mesh = mesh
         self.axes = axis_names
@@ -336,6 +382,15 @@ class DistributedEngine:
         self.n = int(np.prod([mesh.shape[a] for a in axis_names]))
         self.remote_dedup = remote_dedup
         self.deferred_transfer = deferred_transfer
+        # DESIGN.md §11: run Phase 3 distributed over the stub shards
+        # (ring-rotation doubling + vertex-owner splice) instead of
+        # gathering mate[2E] to every device.  Byte-identical results;
+        # per-device Phase 3 state drops from O(2E) to O(2E/n).
+        self.sharded_phase3 = sharded_phase3
+        # gather_circuit=False additionally elides the emission all_gather:
+        # the rank triple comes back sharded and PendingRun.wait emits the
+        # circuit host-side (only meaningful with sharded_phase3).
+        self.gather_circuit = gather_circuit
         # trace probe: called once each time a whole-run/superstep program
         # is (re)traced by jit — the solver's compile-cache accounting
         self.on_trace = on_trace
@@ -447,6 +502,12 @@ class DistributedEngine:
                 bmax = max(bmax, int(np.bincount(owner[busy]).max()))
         oc = open_cap or max(16, int(2 * ob * slack))
         tc = touch_cap or max(16, int(bmax * 4 * slack))
+        # sharded Phase 3 vertex-record table (DESIGN.md §11): device d
+        # owns every vertex v ≡ d (mod n) and receives at most one
+        # canonical record per mate-pair whose canonical stub sits at an
+        # owned vertex — bounded by the owned degree sum.
+        owner_v = np.arange(V) % n
+        p3v = int(np.bincount(owner_v, weights=deg, minlength=n).max())
         return EngineCaps(
             edge_cap=int(edge_cap * slack),
             park_cap=max(8, int(park_max * slack)),
@@ -457,6 +518,7 @@ class DistributedEngine:
             touch_cap=tc,
             open_ship_cap=oc,
             touch_ship_cap=tc,
+            p3v_cap=max(16, int(p3v * slack)),
         )
 
     def load(self, pg: PartitionedGraph,
@@ -803,7 +865,12 @@ class DistributedEngine:
         axes = self.axes
         L = self.n_levels
         n_stubs = 2 * num_edges
-        S = max(1, -(-n_stubs // n))           # mate shard size per device
+        # mate shard width per device: even (sibling s^1 stays shard-local)
+        # so the sharded Phase 3 can run on the accumulator shards as-is
+        S = shard_width(num_edges, n)
+        sharded = self.sharded_phase3
+        gather = self.gather_circuit
+        p3v = c.p3v_cap or num_edges           # vertex-record table width
         wcap = c.mate_ship_cap or 2 * c.pair_cap()
         core = self._make_superstep_core()
 
@@ -834,12 +901,27 @@ class DistributedEngine:
             (state, mate_sh), (flags, metrics) = jax.lax.scan(
                 body, (state, mate0), jnp.arange(L, dtype=I32)
             )
-            mate = jax.lax.all_gather(mate_sh[:S], axes, tiled=True)[:n_stubs]
-            circuit, mate2, ok3 = phase3_device(
-                mate, sv, splice_rounds=c.phase3_rounds,
+            if not sharded:
+                mate = jax.lax.all_gather(mate_sh[:S], axes,
+                                          tiled=True)[:n_stubs]
+                circuit, mate2, ok3 = phase3_device(
+                    mate, sv, splice_rounds=c.phase3_rounds,
+                    batch=(batch or 1),
+                )
+                return circuit, mate2, flags, metrics, ok3
+            # DESIGN.md §11: Phase 3 runs on the accumulator shards
+            # directly — no mate all_gather; sv arrives sharded too.
+            res3 = phase3_sharded(
+                mate_sh[:S], sv, axes, n, n_stubs, p3v,
+                splice_rounds=c.phase3_rounds, gather_circuit=gather,
                 batch=(batch or 1),
             )
-            return circuit, mate2, flags, metrics, ok3
+            if gather:
+                circuit, mate2, ok3 = res3
+                return circuit, mate2, flags, metrics, ok3
+            m2_sh, dist_sh, reach_sh, ok3 = res3
+            packed = jnp.stack([m2_sh, dist_sh, reach_sh], axis=1)  # [S,3]
+            return packed, m2_sh, flags, metrics, ok3
 
         def device_fn(anc, state: EngineState, sv) -> FusedOut:
             state = jax.tree.map(lambda x: x[0], state)  # [1,·] → [·]
@@ -856,15 +938,27 @@ class DistributedEngine:
             )
 
         state_specs = self._state_specs()
+        if sharded and not gather:
+            # sharded outputs: packed rank triple [S, 3] / mate [S] per
+            # device (leading batch axis first under vmap)
+            circuit_spec = P(axes, None) if batch is None \
+                else P(None, axes, None)
+            mate_spec = P(axes) if batch is None else P(None, axes)
+        else:
+            circuit_spec, mate_spec = P(None), P(None)
+        # sharded Phase 3 consumes sv as stub shards (padded to n·S by the
+        # dispatch paths); the replicated oracle wants it whole per device
+        sv_spec = (P(axes) if batch is None else P(None, axes)) \
+            if sharded else P(None)
         out_specs = FusedOut(
-            circuit=P(None), mate=P(None),
+            circuit=circuit_spec, mate=mate_spec,
             flags=P(axes, None, None), metrics=P(axes, None, None),
             phase3_ok=P(),
         )
         fn = shard_map(
             device_fn,
             mesh=self.mesh,
-            in_specs=(P(None, None), state_specs, P(None)),
+            in_specs=(P(None, None), state_specs, sv_spec),
             out_specs=out_specs,
         )
 
@@ -902,6 +996,17 @@ class DistributedEngine:
         sv[1::2] = pg.graph.edge_v
         return sv
 
+    def _pad_sv(self, sv: np.ndarray) -> np.ndarray:
+        """Pad a ``[2E]`` stub-vertex map to the ``n·S`` sharded stub
+        space (identity under the replicated Phase 3).  Pad slots carry
+        vertex 0 — their stubs are unmated, so Phase 3 never reads them."""
+        if not self.sharded_phase3:
+            return sv
+        total = self.n * shard_width(len(sv) // 2, self.n)
+        out = np.zeros(total, dtype=sv.dtype)
+        out[:len(sv)] = sv
+        return out
+
     def _phase3_prog(self):
         """Eager-path Phase 3: the same device program the fused path runs,
         jitted standalone so the oracle produces byte-identical circuits."""
@@ -931,7 +1036,7 @@ class DistributedEngine:
                 ent["dev"] = (
                     jax.tree.map(jnp.asarray, ent["state"]),
                     jnp.asarray(ent["anc"]),
-                    jnp.asarray(ent["sv"], dtype=I32),
+                    jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32),
                 )
                 if self.on_upload is not None:
                     self.on_upload()
@@ -940,7 +1045,7 @@ class DistributedEngine:
         else:
             state = jax.tree.map(jnp.asarray, ent["state"])
             anc = jnp.asarray(ent["anc"])
-            sv_dev = jnp.asarray(ent["sv"], dtype=I32)
+            sv_dev = jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32)
             if self.on_upload is not None:
                 self.on_upload()
             donate = True
@@ -985,7 +1090,7 @@ class DistributedEngine:
             ent["dev"] = (
                 jax.tree.map(jnp.asarray, ent["state"]),
                 jnp.asarray(ent["anc"]),
-                jnp.asarray(ent["sv"], dtype=I32),
+                jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32),
             )
             if self.on_upload is not None:
                 self.on_upload()
@@ -1079,7 +1184,9 @@ class DistributedEngine:
             state = jax.tree.map(
                 lambda *xs: jnp.asarray(np.stack(xs, axis=1)), *states)
             anc = jnp.asarray(np.stack(ancs))                  # [B, H, n]
-            sv = jnp.asarray(np.stack(svs), dtype=I32)         # [B, 2E]
+            sv = jnp.asarray(
+                np.stack([self._pad_sv(s) for s in svs]),
+                dtype=I32)                         # [B, 2E]
             if len(self._batch_cache) >= self._batch_cache_max:
                 self._batch_cache.pop(next(iter(self._batch_cache)))
             self._batch_cache[bkey] = {

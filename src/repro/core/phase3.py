@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ref as _kref
-from ..kernels.pointer_double import (fits_resident_vmem, pointer_double,
-                                      pointer_double_rank, resolve_interpret)
+from ..kernels.pointer_double import (_pick_block, fits_resident_vmem,
+                                      pointer_double, pointer_double_rank,
+                                      pointer_double_rank_shard,
+                                      pointer_double_shard, resolve_interpret)
 from .phase1 import BIG, I32, _seg_starts
 
 
@@ -130,14 +132,44 @@ def circuit_from_mate_jnp(mate: jnp.ndarray, start_stub: jnp.ndarray,
         dist, reach, ptr = jax.lax.fori_loop(0, rounds, body,
                                              (dist, reach, ptr))
 
-    on_orbit = reach & valid
-    # Sort stubs by descending dist among orbit members; non-members last.
+    return emit_circuit(valid, dist, reach)
+
+
+def emit_circuit(valid: jnp.ndarray, dist: jnp.ndarray,
+                 reach: jnp.ndarray) -> jnp.ndarray:
+    """Rank → walk-order emission shared by every Phase 3 backend.
+
+    Sorts stubs by descending halt distance among orbit members (stable,
+    so non-members keep index order), keeps the first E slots, and blanks
+    slots that are not on the orbit.  The sharded path runs the exact
+    same function on the gathered (or host-fetched) rank arrays, which is
+    what makes its circuits byte-identical to the replicated oracle's.
+    """
+    on_orbit = (reach > 0) & valid
     key = jnp.where(on_orbit, -dist, jnp.iinfo(jnp.int32).max)
     order = jnp.argsort(key, stable=True)
-    E = n_stubs // 2
+    E = valid.shape[0] // 2
     out = order[:E].astype(jnp.int32)
     member = on_orbit[out]
     return jnp.where(member, out, -1)
+
+
+def emit_circuit_np(valid: np.ndarray, dist: np.ndarray,
+                    reach: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`emit_circuit` for the ``gather_circuit=False``
+    result mode: the engine fetches the still-sharded rank triple and the
+    host emits the walk order.  Same int32 keys, same stable sort, same
+    tie order — byte-identical output to the device emission."""
+    valid = np.asarray(valid)
+    on_orbit = (np.asarray(reach) > 0) & valid
+    dist = np.asarray(dist).astype(np.int32, copy=False)
+    key = np.where(on_orbit, -dist,
+                   np.iinfo(np.int32).max).astype(np.int32)
+    order = np.argsort(key, kind="stable")
+    E = valid.shape[0] // 2
+    out = order[:E].astype(np.int32)
+    member = on_orbit[out]
+    return np.where(member, out, np.int32(-1))
 
 
 def splice_components_np(
@@ -368,4 +400,403 @@ def phase3_device(mate: jnp.ndarray, stub_vertex: jnp.ndarray,
     circuit = circuit_from_mate_jnp(mate2, start, use_pallas=True,
                                     interpret=interpret, block=block,
                                     batch=batch)
+    return circuit, mate2, ok
+
+
+# ---------------------------------------------------------------------------
+# sharded Phase 3 (DESIGN.md §11): CC + splice + rank over stub shards
+# ---------------------------------------------------------------------------
+#
+# The replicated device Phase 3 above needs the whole mate[2E] on every
+# device (an all_gather right after the level scan).  The sharded twin
+# below keeps Phase 3 itself distributed: each device owns the [S] slice
+# of the stub space with global ids [me·S, me·S + S), S = shard_width(E,n)
+# ≈ 2E/n, and every remote pointer is resolved by rotating *table shards*
+# around the device ring (ppermute) while queries stay home — a
+# deterministic O(S)-memory schedule with no per-pair lane skew, unlike
+# all_to_all query routing whose (src,dst) receive buffers are unbounded
+# for adversarial pointer distributions.  S is even, so a stub's sibling
+# s^1 always lives on the same shard and the sibling-merge/next-pointer
+# steps stay local.
+#
+# Byte-identity with the replicated oracle holds by construction:
+#   · CC doubling gathers the same round-start snapshots, runs ≥ the
+#     oracle's round count (extra rounds past the fixpoint are idempotent
+#     for min-label propagation), and ends with the same local sibling
+#     merge;
+#   · each splice round ships the canonical (s, v, comp, mate) records to
+#     the vertex-owner device (owner(v) = v mod n) and re-runs the
+#     oracle's exact lexsort / rep-dedup / vote / rotate logic there —
+#     every vertex group is wholly owned by one device, so the per-vertex
+#     decisions (and hence the global rotation set) are identical;
+#   · rank doubling mirrors CC, and emission runs the shared
+#     ``emit_circuit`` on the same (valid, dist, reach) values.
+
+def shard_width(num_edges: int, n_parts: int) -> int:
+    """Per-device stub-shard width of the sharded Phase 3: the smallest
+    EVEN S with n·S ≥ 2E.  Evenness keeps each stub's sibling s^1 on the
+    same shard (global ids are [me·S, me·S+S)), so sibling lookups never
+    leave the device.
+
+    >>> shard_width(128, 8), shard_width(100, 8), shard_width(3, 4)
+    (32, 26, 2)
+    """
+    return max(2, 2 * math.ceil(num_edges / max(1, n_parts)))
+
+
+def sharded_phase3_schedule(num_edges: int, n_parts: int,
+                            gather_circuit: bool = True) -> dict:
+    """The sharded Phase 3's static collective schedule, counted in jaxpr
+    *eqns* (ring loops trace one ppermute eqn each; the runtime executes
+    each ``n_parts`` times per loop).  Shared by the engine's published
+    budget (``fused_collective_budget``) and the analysis cost model so
+    the two can never drift.
+
+      · CC doubling: one table-rotation ring per round;
+      · pivot splice (inside the while body, traced once): 6 rings —
+        record ship, vote scatter, vote readback, mate write, relabel
+        scatter, relabel readback — plus 1 ``psum`` for the global
+        `changed` flag;
+      · rank: 1 ring-min for the start stub, 1 ``psum`` fetching the halt
+        stub's mate, one rotation ring per round;
+      · emission: 1 ``all_gather`` (elided when ``gather_circuit=False``,
+        where the rank shards leave the program still sharded).
+    """
+    S = shard_width(num_edges, n_parts)
+    total = n_parts * S
+    rounds = int(math.ceil(math.log2(max(2, total)))) + 1
+    return {
+        "shard_width": S,
+        "stub_space": total,
+        "doubling_rounds": rounds,
+        "splice_rings": 6,
+        "ppermute": 2 * rounds + 6 + 1,
+        "psum": 2,
+        "all_gather": 1 if gather_circuit else 0,
+    }
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _cc_labels_sharded(mate_sh: jnp.ndarray, axes, n: int,
+                       interpret: Optional[bool] = None,
+                       block: int = 1024, batch: int = 1) -> jnp.ndarray:
+    """Sharded twin of :func:`_cc_cycle_labels`: min-label propagation by
+    pointer doubling where each round resolves remote pointers with one
+    full ring rotation of the (nxt, lab) table shards."""
+    S = mate_sh.shape[0]
+    me = jax.lax.axis_index(axes).astype(I32)
+    gid = me * S + jnp.arange(S, dtype=I32)
+    valid = mate_sh >= 0
+    nxt = jnp.where(valid, mate_sh ^ 1, gid).astype(I32)
+    lab = gid
+    perm = _ring_perm(n)
+    rounds = int(math.ceil(math.log2(max(2, n * S)))) + 1
+    blk = _pick_block(S, block)
+    use_kernel = resolve_interpret(interpret) or fits_resident_vmem(
+        S, 2, batch=batch)
+    for _ in range(rounds):
+        q = nxt
+
+        def step(k, carry):
+            tbl, a_nxt, a_lab = carry
+            base = ((jnp.mod(me - k, n)) * S).astype(I32)[None]
+            if use_kernel:
+                a_nxt, a_lab = pointer_double_shard(
+                    q, a_nxt, a_lab, base, tbl[0], tbl[1],
+                    s_real=S, block=blk, interpret=interpret)
+            else:
+                a_nxt, a_lab = _kref.pointer_double_shard_ref(
+                    q, a_nxt, a_lab, base, tbl[0], tbl[1], s_real=S)
+            tbl = jax.lax.ppermute(tbl, axes, perm)
+            return tbl, a_nxt, a_lab
+
+        _, a_nxt, a_lab = jax.lax.fori_loop(
+            0, n, step,
+            (jnp.stack([nxt, lab]), q, jnp.full((S,), BIG, I32)))
+        nxt = a_nxt
+        lab = jnp.minimum(lab, a_lab)
+    iota = jnp.arange(S, dtype=I32)
+    return jnp.minimum(lab, lab[iota ^ 1])
+
+
+def splice_components_sharded(
+    mate_sh: jnp.ndarray,
+    sv_sh: jnp.ndarray,
+    axes,
+    n: int,
+    p3v_cap: int,
+    rounds: int = 64,
+    interpret: Optional[bool] = None,
+    block: int = 1024,
+    batch: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sharded twin of :func:`splice_components_jnp`.
+
+    Per round: canonical (stub, vertex, comp, mate) records ring-ship to
+    their vertex-owner device (owner(v) = v mod n) into a [p3v_cap]
+    table, where the oracle's per-vertex rep/vote/rotate logic runs
+    verbatim on the locally-sorted records; mate rotations and component
+    relabels ring back to the stub/label owners.  Returns
+    ``(mate_sh', ok)`` — ``ok`` is convergence AND no vertex-table
+    overflow (``p3v_cap`` is sized from the degree profile, so overflow
+    only means undersized caps, never silent corruption).
+    """
+    S = mate_sh.shape[0]
+    me = jax.lax.axis_index(axes).astype(I32)
+    iota = jnp.arange(S, dtype=I32)
+    gid = me * S + iota
+    mate_sh = mate_sh.astype(I32)
+    sv_sh = sv_sh.astype(I32)
+    perm = _ring_perm(n)
+    lab0 = _cc_labels_sharded(mate_sh, axes, n, interpret=interpret,
+                              block=block, batch=batch)
+    lo, hi = me * S, me * S + S
+
+    def round_fn(state):
+        mate, lab, _, r, of = state
+        valid = mate >= 0
+        cm = valid & (mate > gid)                 # canonical stub per pair
+
+        # ---- ring 1: ship canonical records to their vertex owner ----
+        def ship_step(k, carry):
+            buf, tbl, cnt, of_t = carry
+            bs, bv, bc, bm, bmk = buf
+            take = (bmk > 0) & (jnp.mod(bv, n) == me)
+            pos = cnt + jnp.cumsum(take.astype(I32)) - 1
+            okw = take & (pos < p3v_cap)
+            slot = jnp.where(okw, pos, p3v_cap)
+            vals = jnp.stack([bv, bc, bs, bm])
+            tbl = tbl.at[:, slot].set(jnp.where(okw, vals, BIG))
+            cnt = cnt + jnp.sum(take.astype(I32))
+            of_t = of_t | (cnt > p3v_cap)
+            buf = jax.lax.ppermute(buf, axes, perm)
+            return buf, tbl, cnt, of_t
+
+        buf0 = jnp.stack([jnp.where(cm, gid, BIG), jnp.where(cm, sv_sh, BIG),
+                          jnp.where(cm, lab, BIG), jnp.where(cm, mate, BIG),
+                          cm.astype(I32)])
+        _, tbl, _, of_t = jax.lax.fori_loop(
+            0, n, ship_step,
+            (buf0, jnp.full((4, p3v_cap + 1), BIG, I32),
+             jnp.zeros((), I32), jnp.zeros((), bool)))
+        tv, tc, ts, tm = (tbl[i, :p3v_cap] for i in range(4))
+
+        # ---- local per-vertex logic (the oracle's, verbatim) ----
+        order = jnp.lexsort((ts, tc, tv))
+        gv, gc, gs, gm = tv[order], tc[order], ts[order], tm[order]
+        gmk = gv < BIG
+        dup = jnp.concatenate(
+            [jnp.zeros((1,), bool), (gv[1:] == gv[:-1]) & (gc[1:] == gc[:-1])]
+        )
+        rep = gmk & ~dup
+        vseg = _seg_starts(gv)
+        n_rep = jax.ops.segment_sum(rep.astype(I32), vseg,
+                                    num_segments=p3v_cap)
+        cand = rep & (n_rep[vseg] >= 2)
+
+        # ---- ring 2: scatter-min votes onto the comp-label owners ----
+        def vote_step(k, carry):
+            vbuf, vote = carry
+            qc, qv, qm = vbuf
+            own = (qm > 0) & (qc >= lo) & (qc < hi)
+            idx = jnp.where(own, qc - lo, S)
+            vote = vote.at[idx].min(jnp.where(own, qv, BIG))
+            vbuf = jax.lax.ppermute(vbuf, axes, perm)
+            return vbuf, vote
+
+        vbuf0 = jnp.stack([jnp.where(cand, gc, BIG),
+                           jnp.where(cand, gv, BIG), cand.astype(I32)])
+        _, vote = jax.lax.fori_loop(
+            0, n, vote_step, (vbuf0, jnp.full((S + 1,), BIG, I32)))
+
+        # ---- ring 3: read each record's comp vote back ----
+        def read_step(k, rbuf):
+            qc, ans = rbuf
+            own = (qc >= lo) & (qc < hi)
+            idx = jnp.where(own, qc - lo, 0)
+            ans = jnp.where(own, vote[idx], ans)
+            return jax.lax.ppermute(jnp.stack([qc, ans]), axes, perm)
+
+        rbuf = jax.lax.fori_loop(
+            0, n, read_step,
+            jnp.stack([jnp.where(gmk, gc, BIG),
+                       jnp.full((p3v_cap,), BIG, I32)]))
+        va = rbuf[1]
+
+        voted = cand & (va == gv)
+        n_take = jax.ops.segment_sum(voted.astype(I32), vseg,
+                                     num_segments=p3v_cap)
+        act = voted & (n_take[vseg] >= 2)
+
+        # circular rotation pairs within each pivot vertex's act group
+        akey = jnp.where(act, gv, BIG)
+        o2 = jnp.argsort(akey, stable=True)
+        hv, hs, hc = akey[o2], gs[o2], gc[o2]
+        hmate = gm[o2]
+        hm = act[o2]
+        hstart = _seg_starts(hv)
+        hlast = jnp.concatenate([hv[1:] != hv[:-1], jnp.ones((1,), bool)])
+        hnxt = jnp.clip(
+            jnp.where(hlast, hstart, jnp.arange(p3v_cap, dtype=I32) + 1),
+            0, p3v_cap - 1)
+        b = hmate[hnxt]                            # mate of the next rep
+        minc = jax.ops.segment_min(jnp.where(hm, hc, BIG), hstart,
+                                   num_segments=p3v_cap)
+        rot_c = minc[hstart]
+
+        # ---- ring 4: deliver mate[a_i] ← b_{i+1}, mate[b_{i+1}] ← a_i ----
+        def write_step(k, carry):
+            wbuf, mpad = carry
+            wa, wb, wm = wbuf
+            own_a = (wm > 0) & (wa >= lo) & (wa < hi)
+            ia = jnp.where(own_a, wa - lo, S)
+            mpad = mpad.at[ia].set(jnp.where(own_a, wb, -1))
+            own_b = (wm > 0) & (wb >= lo) & (wb < hi)
+            ib = jnp.where(own_b, wb - lo, S)
+            mpad = mpad.at[ib].set(jnp.where(own_b, wa, -1))
+            wbuf = jax.lax.ppermute(wbuf, axes, perm)
+            return wbuf, mpad
+
+        wbuf0 = jnp.stack([jnp.where(hm, hs, BIG), jnp.where(hm, b, BIG),
+                           hm.astype(I32)])
+        _, mpad = jax.lax.fori_loop(
+            0, n, write_step,
+            (wbuf0, jnp.concatenate([mate, jnp.full((1,), -1, I32)])))
+        mate_new = mpad[:S]
+
+        # ---- ring 5: deliver comp relabels to the label owners ----
+        def lmap_step(k, carry):
+            mbuf, lmap_p = carry
+            mo, mn, mm = mbuf
+            own = (mm > 0) & (mo >= lo) & (mo < hi)
+            idx = jnp.where(own, mo - lo, S)
+            lmap_p = lmap_p.at[idx].set(jnp.where(own, mn, 0))
+            mbuf = jax.lax.ppermute(mbuf, axes, perm)
+            return mbuf, lmap_p
+
+        mbuf0 = jnp.stack([jnp.where(hm, hc, BIG),
+                           jnp.where(hm, rot_c, BIG), hm.astype(I32)])
+        _, lmap_p = jax.lax.fori_loop(
+            0, n, lmap_step,
+            (mbuf0, jnp.concatenate([gid, jnp.zeros((1,), I32)])))
+        lmap = lmap_p[:S]
+
+        # ---- ring 6: every stub reads lmap[lab] from the label owner ----
+        def lq_step(k, qbuf):
+            ql, ans = qbuf
+            own = (ql >= lo) & (ql < hi)
+            idx = jnp.where(own, ql - lo, 0)
+            ans = jnp.where(own, lmap[idx], ans)
+            return jax.lax.ppermute(jnp.stack([ql, ans]), axes, perm)
+
+        qbuf = jax.lax.fori_loop(0, n, lq_step, jnp.stack([lab, lab]))
+        lab_new = qbuf[1]
+
+        changed = jax.lax.psum(jnp.sum(hm.astype(I32)), axes) > 0
+        return mate_new, lab_new, changed, r - 1, of | of_t
+
+    def cond(state):
+        return state[2] & (state[3] > 0)
+
+    init = (mate_sh, lab0, jnp.array(True), jnp.array(rounds, I32),
+            jnp.array(False))
+    mate_sh, _, still_changing, _, of = jax.lax.while_loop(
+        cond, round_fn, init)
+    return mate_sh, ~still_changing & ~of
+
+
+def _rank_sharded(mate_sh: jnp.ndarray, axes, n: int,
+                  interpret: Optional[bool] = None,
+                  block: int = 1024, batch: int = 1
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sharded list ranking: the doubling loop of
+    :func:`circuit_from_mate_jnp` over rotating (ptr, dist, reach) table
+    shards.  Returns the local (dist, reach) slices."""
+    S = mate_sh.shape[0]
+    me = jax.lax.axis_index(axes).astype(I32)
+    gid = me * S + jnp.arange(S, dtype=I32)
+    valid = mate_sh >= 0
+    nxt = jnp.where(valid, mate_sh ^ 1, gid).astype(I32)
+    perm = _ring_perm(n)
+
+    # global start stub = min valid gid, by a scalar ring-min
+    def min_step(k, carry):
+        rot, acc = carry
+        rot = jax.lax.ppermute(rot, axes, perm)
+        return rot, jnp.minimum(acc, rot)
+
+    local_min = jnp.min(jnp.where(valid, gid, BIG))[None]
+    _, acc = jax.lax.fori_loop(0, n, min_step, (local_min, local_min))
+    start = acc[0]
+
+    # halt stub t = mate[start ^ 1], fetched from its owner via one psum
+    q = start ^ 1
+    t = jax.lax.psum(jnp.sum(jnp.where(gid == q, mate_sh, 0)), axes)
+
+    ptr = jnp.where(gid == t, gid, nxt)
+    dist = jnp.where(gid == t, 0, 1).astype(jnp.int32)
+    reach = (gid == t).astype(I32)
+    rounds = int(math.ceil(math.log2(max(2, n * S)))) + 1
+    blk = _pick_block(S, block)
+    use_kernel = resolve_interpret(interpret) or fits_resident_vmem(
+        S, 3, batch=batch)
+    for _ in range(rounds):
+        qq = ptr
+
+        def step(k, carry):
+            tbl, a_ptr, a_dist, a_reach = carry
+            base = ((jnp.mod(me - k, n)) * S).astype(I32)[None]
+            if use_kernel:
+                a_ptr, a_dist, a_reach = pointer_double_rank_shard(
+                    qq, a_ptr, a_dist, a_reach, base,
+                    tbl[0], tbl[1], tbl[2],
+                    s_real=S, block=blk, interpret=interpret)
+            else:
+                a_ptr, a_dist, a_reach = _kref.pointer_double_rank_shard_ref(
+                    qq, a_ptr, a_dist, a_reach, base,
+                    tbl[0], tbl[1], tbl[2], s_real=S)
+            tbl = jax.lax.ppermute(tbl, axes, perm)
+            return tbl, a_ptr, a_dist, a_reach
+
+        zero = jnp.zeros((S,), I32)
+        _, a_ptr, a_dist, a_reach = jax.lax.fori_loop(
+            0, n, step, (jnp.stack([ptr, dist, reach]), qq, zero, zero))
+        ptr = a_ptr
+        dist = dist + a_dist
+        reach = jnp.maximum(reach, a_reach)
+    return dist, reach
+
+
+def phase3_sharded(mate_sh: jnp.ndarray, sv_sh: jnp.ndarray, axes, n: int,
+                   n_stubs: int, p3v_cap: int,
+                   splice_rounds: int = 64,
+                   gather_circuit: bool = True,
+                   interpret: Optional[bool] = None,
+                   block: int = 1024, batch: int = 1):
+    """Full sharded Phase 3 for one device's [S] stub shard.
+
+    With ``gather_circuit=True`` (the default) the run's ONE
+    ``all_gather`` happens here — at the very end, on the post-rank
+    (mate, dist, reach) triple — and the function returns the replicated
+    ``(circuit [E], mate [2E], ok)`` exactly like :func:`phase3_device`.
+    With ``gather_circuit=False`` nothing is gathered: the triple comes
+    back still sharded (``(mate_sh, dist_sh, reach_sh, ok)``) and the
+    caller (the engine's :class:`PendingRun`) emits the circuit host-side
+    from the fetched shards via the same :func:`emit_circuit` ordering.
+    """
+    mate2_sh, ok = splice_components_sharded(
+        mate_sh, sv_sh, axes, n, p3v_cap, rounds=splice_rounds,
+        interpret=interpret, block=block, batch=batch)
+    dist_sh, reach_sh = _rank_sharded(mate2_sh, axes, n,
+                                      interpret=interpret, block=block,
+                                      batch=batch)
+    if not gather_circuit:
+        return mate2_sh, dist_sh, reach_sh, ok
+    packed = jnp.stack([mate2_sh, dist_sh, reach_sh], axis=1)   # [S, 3]
+    g = jax.lax.all_gather(packed, axes, tiled=True)            # [n·S, 3]
+    mate2 = g[:n_stubs, 0]
+    circuit = emit_circuit(mate2 >= 0, g[:n_stubs, 1], g[:n_stubs, 2])
     return circuit, mate2, ok

@@ -76,6 +76,7 @@ def round_caps(caps: EngineCaps, lo: int = 16) -> EngineCaps:
         open_ship_cap=r(caps.open_ship_cap),
         touch_ship_cap=r(caps.touch_ship_cap),
         mate_ship_cap=r(caps.mate_ship_cap),
+        p3v_cap=r(caps.p3v_cap),
     )
 
 
@@ -98,6 +99,13 @@ LADDER_DIVISORS = {
     "open_ship_cap": 4,
     "touch_cap": 1,
     "touch_ship_cap": 1,
+    # sharded Phase 3 vertex-record shard (DESIGN.md §11): owned degree
+    # sums average 2·e_cap/n per device but their *max* over owners swings
+    # with partition luck (0.3–0.8·e_cap observed on scale-5 RMAT pools at
+    # n=8), so like touch it floors at e_cap itself — the table is
+    # 4 int32 lanes, so the full-scale floor costs ~16·e_cap bytes and
+    # never splits a bucket
+    "p3v_cap": 1,
 }
 
 
@@ -219,7 +227,7 @@ def ladder_waste(exact: EngineCaps, quantized: EngineCaps) -> float:
     1.0
     """
     fields = ("edge_cap", "park_cap", "ship_cap", "new_cap", "open_cap",
-              "touch_cap", "open_ship_cap", "touch_ship_cap")
+              "touch_cap", "open_ship_cap", "touch_ship_cap", "p3v_cap")
     num = sum(getattr(quantized, f) for f in fields)
     den = max(1, sum(getattr(exact, f) for f in fields))
     return num / den

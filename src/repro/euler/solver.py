@@ -181,6 +181,16 @@ class EulerSolver:
                         cached on device (repeat solves skip the
                         host→device upload); off = donate a fresh upload
                         per solve.
+    sharded_phase3:     run Phase 3 distributed over the stub shards
+                        (DESIGN.md §11) — per-device Phase 3 state
+                        O(2E/n) instead of O(2E), byte-identical
+                        circuits.  Default ``None`` = on for
+                        ``n_parts > 1``, off for a single partition;
+                        ``False`` pins the replicated oracle path.
+    gather_circuit:     ``False`` elides the sharded path's emission
+                        ``all_gather``: the post-rank shards are fetched
+                        raw and the circuit is emitted host-side
+                        (byte-identical; requires ``sharded_phase3``).
     """
 
     def __init__(
@@ -201,6 +211,8 @@ class EulerSolver:
         width_ladder: Sequence[int] = (1, 2, 4),
         program_cache_max: int = 32,
         device_resident: bool = True,
+        sharded_phase3: Optional[bool] = None,
+        gather_circuit: bool = True,
     ):
         if backend not in ("device", "host"):
             raise ValueError(f"backend must be 'device' or 'host': {backend}")
@@ -229,6 +241,21 @@ class EulerSolver:
             else:
                 n_parts = 4
         self.n_parts = int(n_parts)
+        # DESIGN.md §11: distributed Phase 3 over the stub shards.  On by
+        # default whenever there is real parallelism to shard over; P=1
+        # defaults to the replicated oracle path (identical results, no
+        # ring machinery).  Explicit True/False overrides either way.
+        if sharded_phase3 is None:
+            sharded_phase3 = self.n_parts > 1
+        self.sharded_phase3 = bool(sharded_phase3)
+        # gather_circuit=False elides the emission all_gather: the rank
+        # shards are fetched raw and the circuit is emitted host-side
+        # (byte-identical; sharded mode only).
+        self.gather_circuit = bool(gather_circuit)
+        if not self.gather_circuit and not self.sharded_phase3:
+            raise ValueError(
+                "gather_circuit=False requires sharded_phase3 (the "
+                "replicated Phase 3 always materializes the circuit)")
         # bucket → engine (+ its compiled programs).  Bounded FIFO so a
         # long-running session over heterogeneous request shapes cannot
         # grow host memory without bound; evicting a bucket just costs a
@@ -369,6 +396,8 @@ class EulerSolver:
                     deferred_transfer=self.deferred_transfer,
                     on_trace=self._on_trace,
                     on_upload=self._on_upload,
+                    sharded_phase3=self.sharded_phase3,
+                    gather_circuit=self.gather_circuit,
                 )
                 if len(self._engines) >= self._engines_max:
                     evicted = next(iter(self._engines))

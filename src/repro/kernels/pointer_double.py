@@ -1,7 +1,7 @@
 """Pallas TPU kernels: pointer-doubling rounds (the Phase-1/Phase-3 hot
 loop of the Euler engine).
 
-Two variants share the resident-table layout:
+Two whole-table variants share the resident-table layout:
 
   ``pointer_double``       nxt' = nxt[nxt];  lab' = min(lab, lab[nxt])
                            (min-label connected components)
@@ -9,12 +9,24 @@ Two variants share the resident-table layout:
                            reach' = reach | reach[ptr]
                            (list ranking for circuit emission)
 
+and two *shard* variants back the distributed Phase 3 (DESIGN.md §11),
+where the jump table is split across devices and rotated around the ring:
+
+  ``pointer_double_shard``       masked gather of (nxt, lab) against ONE
+                                 resident table shard at global offset
+                                 ``base`` — queries outside the shard pass
+                                 through unchanged
+  ``pointer_double_rank_shard``  the 3-table (ptr, dist, reach) twin
+
 TPU adaptation: random gathers have no VMEM-tiled locality, so the kernel
 keeps the *jump table* resident — the grid tiles the query vector while
 the full `nxt`/`lab` tables stream once into VMEM as a second operand
 block (valid for tables ≤ a few M entries; the distributed engine's
 per-partition tables are capacity-bounded exactly so this holds).  Gathers
-execute on the VPU via dynamic indexing into the resident block.
+execute on the VPU via dynamic indexing into the resident block.  The
+shard variants only ever see an [S ≈ 2E/n] table slice, so their VMEM
+gate opens for graphs whose whole-table gate is closed — the point of
+sharding Phase 3.
 
 Platform gating: ``interpret=None`` (the default) resolves to the compiled
 kernel on TPU and interpret mode everywhere else, so the same call sites
@@ -175,3 +187,129 @@ def pointer_double_rank(ptr: jnp.ndarray, dist: jnp.ndarray,
         out_shape=out_shape,
         interpret=interpret,
     )(ptr, dist, reach, ptr, dist, reach)
+
+
+# ---------------------------------------------------------------------------
+# shard variants: one resident table *slice*, rotated around the ring
+# ---------------------------------------------------------------------------
+#
+# In the sharded Phase 3 (DESIGN.md §11) each device holds an [S] slice of
+# the global jump table covering global ids [base, base + s_real); the
+# slices rotate around the device ring via ppermute while the query vector
+# stays home.  Each ring step runs one shard kernel: queries that land in
+# the visiting slice are answered (gathered), the rest keep their current
+# answer.  After a full rotation every query has been answered exactly
+# once, because the slices tile the global id space.
+#
+# ``base`` is a [1] int32 operand (it depends on the traced ring step);
+# ``s_real`` is the static number of live rows in the (block-padded) table
+# slice, so padding rows can never satisfy the ownership test.
+
+def _shard_kernel(s_real, q_ref, a_nxt_ref, a_lab_ref,
+                  base_ref, t_nxt_ref, t_lab_ref,
+                  o_nxt_ref, o_lab_ref):
+    base = base_ref[0]
+    q = q_ref[...]
+    idx = q - base
+    own = (idx >= 0) & (idx < s_real)
+    safe = jnp.where(own, idx, 0)
+    o_nxt_ref[...] = jnp.where(own, t_nxt_ref[...][safe], a_nxt_ref[...])
+    o_lab_ref[...] = jnp.where(own, t_lab_ref[...][safe], a_lab_ref[...])
+
+
+def pointer_double_shard(q: jnp.ndarray, a_nxt: jnp.ndarray,
+                         a_lab: jnp.ndarray, base: jnp.ndarray,
+                         tbl_nxt: jnp.ndarray, tbl_lab: jnp.ndarray,
+                         s_real: int, block: int = 2048,
+                         interpret: Optional[bool] = None):
+    """One ring step of the sharded CC doubling round.
+
+    q/a_nxt/a_lab [N] int32 queries + answers-so-far; tbl_nxt/tbl_lab [T]
+    the visiting table slice (rows ≥ ``s_real`` are padding); base [1]
+    int32 = the slice's global offset.  Rows with base ≤ q < base+s_real
+    take the slice's values (``a_nxt' = tbl_nxt[q-base]``,
+    ``a_lab' = tbl_lab[q-base]``); the rest pass through.
+    """
+    interpret = resolve_interpret(interpret)
+    N = q.shape[0]
+    block = _pick_block(N, block)
+    T = tbl_nxt.shape[0]
+    out_shape = (
+        jax.ShapeDtypeStruct((N,), a_nxt.dtype),
+        jax.ShapeDtypeStruct((N,), a_lab.dtype),
+    )
+    return pl.pallas_call(
+        functools.partial(_shard_kernel, int(s_real)),
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),    # queries tile
+            pl.BlockSpec((block,), lambda i: (i,)),    # answers tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),        # global base offset
+            pl.BlockSpec((T,), lambda i: (0,)),        # resident table shard
+            pl.BlockSpec((T,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, a_nxt, a_lab, base, tbl_nxt, tbl_lab)
+
+
+def _rank_shard_kernel(s_real, q_ref, a_ptr_ref, a_dist_ref, a_reach_ref,
+                       base_ref, t_ptr_ref, t_dist_ref, t_reach_ref,
+                       o_ptr_ref, o_dist_ref, o_reach_ref):
+    base = base_ref[0]
+    q = q_ref[...]
+    idx = q - base
+    own = (idx >= 0) & (idx < s_real)
+    safe = jnp.where(own, idx, 0)
+    o_ptr_ref[...] = jnp.where(own, t_ptr_ref[...][safe], a_ptr_ref[...])
+    o_dist_ref[...] = jnp.where(own, t_dist_ref[...][safe], a_dist_ref[...])
+    o_reach_ref[...] = jnp.where(own, t_reach_ref[...][safe],
+                                 a_reach_ref[...])
+
+
+def pointer_double_rank_shard(q: jnp.ndarray, a_ptr: jnp.ndarray,
+                              a_dist: jnp.ndarray, a_reach: jnp.ndarray,
+                              base: jnp.ndarray, tbl_ptr: jnp.ndarray,
+                              tbl_dist: jnp.ndarray, tbl_reach: jnp.ndarray,
+                              s_real: int, block: int = 2048,
+                              interpret: Optional[bool] = None):
+    """One ring step of the sharded list-ranking round: the 3-table
+    (ptr, dist, reach) twin of :func:`pointer_double_shard`.  Owned
+    queries take the slice's (ptr, dist, reach); the caller combines
+    (``dist += a_dist``, ``reach |= a_reach``, ``ptr = a_ptr``) after the
+    full rotation."""
+    interpret = resolve_interpret(interpret)
+    N = q.shape[0]
+    block = _pick_block(N, block)
+    T = tbl_ptr.shape[0]
+    out_shape = (
+        jax.ShapeDtypeStruct((N,), a_ptr.dtype),
+        jax.ShapeDtypeStruct((N,), a_dist.dtype),
+        jax.ShapeDtypeStruct((N,), a_reach.dtype),
+    )
+    return pl.pallas_call(
+        functools.partial(_rank_shard_kernel, int(s_real)),
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),    # queries tile
+            pl.BlockSpec((block,), lambda i: (i,)),    # answers tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),        # global base offset
+            pl.BlockSpec((T,), lambda i: (0,)),        # resident table shard
+            pl.BlockSpec((T,), lambda i: (0,)),
+            pl.BlockSpec((T,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, a_ptr, a_dist, a_reach, base, tbl_ptr, tbl_dist, tbl_reach)

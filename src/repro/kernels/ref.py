@@ -25,6 +25,33 @@ def pointer_double_rank_ref(ptr: jnp.ndarray, dist: jnp.ndarray,
     return ptr[ptr], dist + dist[ptr], jnp.maximum(reach, reach[ptr])
 
 
+def _shard_own(q, base, s_real):
+    idx = q - base
+    own = (idx >= 0) & (idx < s_real)
+    return own, jnp.where(own, idx, 0)
+
+
+def pointer_double_shard_ref(q, a_nxt, a_lab, base, tbl_nxt, tbl_lab,
+                             s_real: int):
+    """One ring step of the sharded CC gather: queries owned by the
+    visiting table slice (base ≤ q < base+s_real) take its values,
+    others keep their current answers."""
+    own, idx = _shard_own(q, base[0], s_real)
+    return (jnp.where(own, tbl_nxt[idx], a_nxt),
+            jnp.where(own, tbl_lab[idx], a_lab))
+
+
+def pointer_double_rank_shard_ref(q, a_ptr, a_dist, a_reach, base,
+                                  tbl_ptr, tbl_dist, tbl_reach,
+                                  s_real: int):
+    """One ring step of the sharded list-ranking gather (3-table twin of
+    :func:`pointer_double_shard_ref`)."""
+    own, idx = _shard_own(q, base[0], s_real)
+    return (jnp.where(own, tbl_ptr[idx], a_ptr),
+            jnp.where(own, tbl_dist[idx], a_dist),
+            jnp.where(own, tbl_reach[idx], a_reach))
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True) -> jnp.ndarray:
     """q [B,S,H,D], k/v [B,T,H,D] (same head count — GQA is handled by the

@@ -1,0 +1,120 @@
+"""Seeded stand-in for the small slice of Hypothesis this suite uses.
+
+Hypothesis stays an optional dev dependency (requirements-dev.txt / CI
+install the real thing); when it is absent the property tests still run
+instead of skipping: each ``@given`` test draws ``max_examples``
+pseudo-random examples from an RNG seeded by the test's qualified name,
+so a failure reproduces exactly across runs and machines.  Only the API
+surface the tests use is provided — ``given``, ``settings`` (stored,
+mostly ignored), and ``st.integers`` / ``st.booleans`` /
+``st.sampled_from`` / ``st.composite``.
+
+``REPRO_HYPO_MAX_EXAMPLES`` caps the per-test example count (the shim's
+equivalent of a Hypothesis profile's ``max_examples``).
+"""
+import functools
+import inspect
+import os
+import zlib
+
+import numpy as np
+
+#: lets tests introspect which implementation ran them
+IS_FALLBACK = True
+
+
+class Strategy:
+    """A seeded draw function with a label for failure messages."""
+
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self.label = label
+
+    def example_from(self, rng):
+        return self._draw(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._draw(rng)),
+                        f"{self.label}.map")
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                        f"sampled_from(<{len(seq)}>)")
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def build(*args, **kwargs):
+            def draw_fn(rng):
+                draw = lambda strat: strat.example_from(rng)  # noqa: E731
+                return fn(draw, *args, **kwargs)
+
+            return Strategy(draw_fn, fn.__name__)
+
+        return build
+
+
+st = _Strategies()
+
+
+def settings(**kwargs):
+    """Record the settings on the test function; ``given`` reads them.
+    Unknown keywords (deadline, suppress_health_check, ...) are accepted
+    and ignored, matching how the tests call the real API."""
+
+    def deco(fn):
+        merged = dict(getattr(fn, "_hypofallback_settings", {}))
+        merged.update(kwargs)
+        fn._hypofallback_settings = merged
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def deco(fn):
+        conf = getattr(fn, "_hypofallback_settings", {})
+        n = int(conf.get("max_examples", 10))
+        cap = os.environ.get("REPRO_HYPO_MAX_EXAMPLES")
+        if cap:
+            n = max(1, min(n, int(cap)))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                example = tuple(s.example_from(rng) for s in strategies)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as exc:
+                    labels = ", ".join(s.label for s in strategies)
+                    raise AssertionError(
+                        f"{fn.__name__}: falsifying example {i + 1}/{n} "
+                        f"(seed={seed}, strategies=[{labels}]): "
+                        f"{example!r}") from exc
+
+        # strategy-filled parameters must not look like pytest fixtures:
+        # hide the wrapped signature from inspect/pytest
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.is_hypothesis_fallback = True
+        return wrapper
+
+    return deco

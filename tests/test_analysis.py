@@ -204,7 +204,10 @@ def test_audit_golden_scale5():
         from repro.graphgen.eulerize import eulerian_rmat
 
         g = eulerian_rmat(5, avg_degree=3, seed=0)
-        solver = EulerSolver(n_parts=2, width_ladder=(1, 4))
+        # pin the replicated Phase 3 oracle path (sharded defaults on
+        # for P>1 and has its own golden below)
+        solver = EulerSolver(n_parts=2, width_ladder=(1, 4),
+                             sharded_phase3=False)
         report = audit_graph(solver, g)
         print("REPORT=" + json.dumps(report, default=str))
 
@@ -238,3 +241,102 @@ def test_audit_golden_scale5():
     one = report["programs"][0]
     assert one["donated_marker"] is True       # one-shot path donates
     assert one["resident_marker"] is False     # cached program must not
+
+
+# ----------------------------------------------------------------------
+# golden audit of the SHARDED Phase 3 programs (DESIGN.md §11)
+# ----------------------------------------------------------------------
+def test_audit_golden_sharded_scale5():
+    out = run_with_devices("""
+        import json
+        import repro.core.engine as engine_mod
+        from repro.analysis import audit_graph
+        from repro.euler import EulerSolver
+        from repro.graphgen.eulerize import eulerian_rmat
+
+        g = eulerian_rmat(5, avg_degree=3, seed=0)
+        solver = EulerSolver(n_parts=2, width_ladder=(1, 4))
+        assert solver.sharded_phase3          # default ON for P > 1
+        report = audit_graph(solver, g)
+        print("REPORT=" + json.dumps(report, default=str))
+
+        ng = EulerSolver(n_parts=2, width_ladder=(1,),
+                         gather_circuit=False)
+        rep_ng = audit_graph(ng, g, widths=(1,), check_donation=False)
+        print("REPORT_NG=" + json.dumps(rep_ng, default=str))
+
+        # the live gate covers the ring schedule too: an under-budgeted
+        # ppermute count must fail the sharded audit
+        real = engine_mod.fused_collective_budget
+        def tampered(n_levels, **kw):
+            b = dict(real(n_levels, **kw))
+            if "ppermute" in b and b["ppermute"]:
+                b["ppermute"] -= 1
+            return b
+        engine_mod.fused_collective_budget = tampered
+        bad = audit_graph(solver, g, widths=(1,), check_donation=False)
+        assert not bad["ok"], "audit passed under a tampered ring budget"
+        viol = bad["programs"][0]["violations"]
+        assert any("ppermute" in v for v in viol), viol
+        print("TAMPER_DETECTED")
+    """, n=8)
+    assert "TAMPER_DETECTED" in out
+    report = json.loads(out.split("REPORT=", 1)[1].splitlines()[0])
+    assert report["ok"], report
+    assert report["bucket"]["sharded_phase3"] is True
+    n_levels = report["bucket"]["n_levels"]
+    for prog in report["programs"]:
+        assert prog["violations"] == []
+        cen, sched = prog["census"], prog["budget"]["phase3"]
+        rounds = sched["doubling_rounds"]
+        # ring schedule: 2R+7 ppermute eqns, 2 psum, one emission gather
+        assert cen["ppermute"] == 2 * rounds + 7 == sched["ppermute"]
+        assert cen["psum"] == 2
+        assert cen["all_gather"] == 1
+        assert cen["all_to_all"] == prog["budget"]["all_to_all"]
+        assert cen["pallas_call"] == prog["cost"]["expected_pallas_calls"]
+        assert prog["cost"]["sharded"] is True
+        # exactly one all_to_all-bearing scan (the level scan); the ring
+        # fori_loops lower to ppermute-only scans; NO gather in any scan
+        level_scans = [s for s in prog["scans"] if s[1].get("all_to_all")]
+        assert len(level_scans) == 1 and level_scans[0][0] == n_levels
+        assert not any(s[1].get("all_gather") for s in prog["scans"])
+
+    rep_ng = json.loads(out.split("REPORT_NG=", 1)[1].splitlines()[0])
+    assert rep_ng["ok"], rep_ng
+    ng_prog = rep_ng["programs"][0]
+    # gather_circuit=False elides the final all_gather entirely
+    assert ng_prog["census"].get("all_gather", 0) == 0
+    assert ng_prog["budget"]["phase3"]["all_gather"] == 0
+
+
+# ----------------------------------------------------------------------
+# peak-memory regression: per-device Phase 3 state is O(2E/n), not O(2E)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n_parts", [2, 4, 8])
+def test_sharded_phase3_memory_is_o_2e_over_n(n_parts):
+    e_cap = 1 << 20
+    rep = pallas_cost_model(e_cap, None)
+    sh = pallas_cost_model(e_cap, None, n_parts=n_parts, sharded=True)
+    assert sh["sharded"] and not rep["sharded"]
+    # table width shrinks by exactly the partition count (up to the
+    # even-width rounding of shard_width and the replicated block pad)
+    assert sh["phase3_table_width"] * n_parts <= \
+        rep["phase3_table_width"] + 2 * n_parts
+    # the persistent working set follows: n devices hold ~1/n each
+    assert sh["phase3_state_bytes"] * n_parts <= \
+        rep["phase3_state_bytes"] + 64 * n_parts
+    for name in ("cc", "rank"):
+        assert sh["loops"][name]["resident_bytes"] * n_parts <= \
+            rep["loops"][name]["resident_bytes"] + 64 * n_parts
+
+
+def test_sharded_reopens_vmem_gate_for_giant_tables():
+    # 2^22 edges: the replicated rank tables (3 x 8M x 4B = 96MB) blow
+    # the 12MB VMEM budget, but 32-way shards (3 x 256K x 4B = 3MB) fit
+    # again — sharding is what keeps the kernel path viable at scale
+    rep = pallas_cost_model(1 << 22, 2)
+    assert not rep["loops"]["rank"]["fits_resident_vmem"]
+    sh = pallas_cost_model(1 << 22, 2, n_parts=32, sharded=True)
+    assert sh["loops"]["rank"]["fits_resident_vmem"]
+    assert sh["loops"]["rank"]["model_fits"]
