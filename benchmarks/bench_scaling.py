@@ -62,6 +62,10 @@ LADDER_SERIES = [  # (scale, parts, avg degree, pool, max_batch, passes)
     (5, 8, 4, 16, 4, 3),
 ]
 
+AUTOTUNE_SERIES = [  # (scale, parts, avg degree, pool, max_batch, passes)
+    (5, 8, 4, 16, 4, 3),
+]
+
 PHASE3_SERIES = [  # (scale, parts) — replicated vs sharded Phase 3
     (9, 8), (11, 8),
 ]
@@ -302,7 +306,7 @@ def run_ladder(series=LADDER_SERIES, seed=0):
             base = base or cps
             caps = next(iter(rep))[3]
             cs = solver.cache_stats
-            widths_used = sorted(set(mb.flushes))
+            widths_used = mb.flushes.widths()
             rows.append({
                 "config": name, "pool": pool_n, "buckets": len(rep),
                 "cold_s": round(t_cold, 2),
@@ -315,6 +319,120 @@ def run_ladder(series=LADDER_SERIES, seed=0):
                 "p3_rounds": caps.phase3_rounds,
                 "compiles": cs.compiles,
                 "steady_uploads": cs.state_uploads - up0,
+            })
+    return rows
+
+
+def run_autotune(series=AUTOTUNE_SERIES, seed=0):
+    """Static ``--widths`` configuration vs the adaptive autotuner
+    (DESIGN.md §12) on the same heterogeneous same-scale pool.
+
+    The *static* config is the PR 6 serving recipe: a blocking cold
+    sweep compiles every bucket's B=1 program, then the modal bucket's
+    quota width is prewarmed synchronously, and only then does the
+    serving loop start — no request is answered until every compile has
+    retired.  The *adaptive* config serves from the first arrival: B=1
+    programs compile on first flush, and the autotuner's background
+    compile service warms ladder widths behind live traffic as the flush
+    histograms accrue, so ``first_wide_s`` (seconds from the first
+    arrival to the first >1-width dispatch) and ``dispatches_before_wide``
+    bound the mid-session upgrade the policy delivers.
+
+    ``session_circuits/s`` spans everything from config construction
+    (static pays its cold+prewarm stall inside the window; adaptive pays
+    cold compiles inline, overlapped with serving).  ``steady_circuits/s``
+    is the best of two post-warmup passes in which no background compile
+    landed (windows that absorb one are re-measured — on a CPU host the
+    compile thread shares cores with the simulated mesh) — the acceptance
+    bound is adaptive steady ≥ static steady within tolerance (same
+    warmed ladder, same programs; the autotuner must not tax the warm
+    path).
+    """
+    from repro.euler.autotune import AutoTuner
+    from repro.launch.serve import MicroBatcher
+
+    def serve_passes(mb, pool, passes, tuner=None):
+        target = len(pool) * passes
+        seq = served = 0
+        t0 = time.perf_counter()
+        while served < target:
+            if seq < target and seq - served < len(pool):
+                done = mb.submit(seq, pool[seq % len(pool)])
+                seq += 1
+            elif seq < target:
+                done = mb.poll()
+            else:
+                done = mb.drain()
+                assert done, "drain lost requests"
+            if tuner is not None:
+                tuner.step()
+            served += len(done)
+        return time.perf_counter() - t0
+
+    rows = []
+    for scale, parts, deg, pool_n, max_batch, passes in series:
+        pool = [eulerian_rmat(scale, avg_degree=deg, seed=seed + i)
+                for i in range(pool_n)]
+        for name in ("static-widths", "adaptive"):
+            t_session = time.perf_counter()
+            solver = EulerSolver(n_parts=parts, partition_seed=seed)
+            tuner = None
+            if name == "adaptive":
+                tuner = AutoTuner(solver, max_batch=max_batch)
+            else:
+                warm = solver.solve_many(pool)      # blocking cold sweep
+                rep, members = {}, {}
+                for g, r in zip(pool, warm):
+                    rep.setdefault(r.cache.bucket, g)
+                    members[r.cache.bucket] = \
+                        members.get(r.cache.bucket, 0) + 1
+                modal = max(members, key=members.get)
+                solver.prewarm(rep[modal], (max_batch,))
+            mb = MicroBatcher(solver, max_batch=max_batch,
+                              deadline_s=0.005, pipeline_depth=2,
+                              autotuner=tuner)
+            t_first = time.perf_counter()
+            serve_passes(mb, pool, passes, tuner)
+            session_s = time.perf_counter() - t_session
+            fl = mb.flushes
+            first_wide = (round(fl.first_wide_t - t_first, 2)
+                          if fl.first_wide_t is not None else None)
+            # steady window: a pass only counts as steady if no
+            # background compile landed inside it — a bucket's flush
+            # mass can cross the prewarm threshold mid-window and the
+            # resulting XLA compile steals the serving cores (CPU
+            # hosts share them with the simulated mesh).  Re-measure
+            # until a window stays quiet, then keep the best of two
+            # quiet windows (static has no queue — its compiles all
+            # retired before serving began).
+            def steady_pass():
+                while True:
+                    p0 = (tuner.service.prewarms
+                          if tuner is not None else 0)
+                    s = serve_passes(mb, pool, passes, tuner)
+                    if tuner is None or tuner.service.prewarms == p0:
+                        return s
+                    tuner.service.join(timeout=600)
+
+            if tuner is not None:
+                tuner.service.join(timeout=600)
+            steady_s = min(steady_pass(), steady_pass())
+            cs = solver.cache_stats
+            ts = tuner.stats() if tuner is not None else {}
+            if tuner is not None:
+                tuner.close(timeout=10)
+            rows.append({
+                "config": name, "pool": pool_n,
+                "session_circuits/s":
+                    round(pool_n * passes / max(session_s, 1e-9), 2),
+                "steady_circuits/s":
+                    round(pool_n * passes / max(steady_s, 1e-9), 2),
+                "first_wide_s": first_wide,
+                "narrow_before_wide": fl.narrow_before_wide,
+                "widths_used": fl.widths(),
+                "compiles": cs.compiles,
+                "async_prewarms": ts.get("async_prewarms", 0),
+                "pinned": ts.get("pinned", 0),
             })
     return rows
 

@@ -42,6 +42,7 @@ def main():
         "serving": lambda: bench_scaling.run_serving(),
         "batched": lambda: bench_scaling.run_batched(series=batched_series),
         "ladder": lambda: bench_scaling.run_ladder(),
+        "autotune": lambda: bench_scaling.run_autotune(),
         "phase3": lambda: bench_scaling.run_phase3(series=phase3_series),
         "splits": lambda: bench_splits.run(scale=kw["scale"] - 1,
                                            parts=kw["parts"]),
@@ -92,6 +93,16 @@ def _summarize(name, res):
                   f"({r['x_vs_pr3']}x vs pr3-sync; steady "
                   f"{r['steady_circuits/s']}), widths {r['widths_used']}, "
                   f"rounds {r['splice_rounds']}/{r['p3_rounds']}")
+    elif name == "autotune":
+        for r in res:
+            fw = (f"first wide at {r['first_wide_s']}s"
+                  if r["first_wide_s"] is not None else "no wide flush")
+            print(f"  {r['config']:>14s}: session "
+                  f"{r['session_circuits/s']} circuits/s, steady "
+                  f"{r['steady_circuits/s']}, widths {r['widths_used']} "
+                  f"({fw}, {r['narrow_before_wide']} narrow before; "
+                  f"{r['async_prewarms']} async prewarm(s), "
+                  f"{r['pinned']} pinned)")
     elif name == "phase3":
         for r in res:
             print(f"  {r['graph']:>10s}: replicated={r['replicated_s']}s "

@@ -240,6 +240,56 @@ def expected_pallas_calls(e_cap: int, batch: Optional[int] = None,
 
 
 # ----------------------------------------------------------------------
+# static per-program byte cost (the solver's program_cache_bytes unit)
+# ----------------------------------------------------------------------
+
+#: int32 lanes per EngineState table group (see ``EngineState``: parked
+#: edges pk_* [7 + mask], open paths op_* [5 + mask], touch pairs tc_*
+#: [6 + mask], level-0 local edges le_* [5 + mask]); each group also
+#: carries one bool mask lane.
+ENGINE_STATE_LANES = {
+    "park_cap": 7,
+    "open_cap": 5,
+    "touch_cap": 6,
+    "edge_cap": 5,
+}
+
+
+def engine_state_bytes(caps) -> int:
+    """Per-device ``EngineState`` bytes for one bucket's caps: the int32
+    table lanes plus one bool mask lane per table group.
+
+    >>> from repro.core.engine import EngineCaps
+    >>> engine_state_bytes(EngineCaps(edge_cap=0, park_cap=1, ship_cap=0,
+    ...     new_cap=0, open_cap=0, touch_cap=0))      # 7 int32 + 1 bool
+    29
+    """
+    total = 0
+    for field, lanes in ENGINE_STATE_LANES.items():
+        width = int(getattr(caps, field))
+        total += (4 * lanes + 1) * width
+    return total
+
+
+def program_cost_bytes(key, batch: Optional[int] = None,
+                       sharded: bool = False) -> int:
+    """Modeled whole-mesh device footprint of one cached ``(bucket, B)``
+    program — the byte unit of ``EulerSolver(program_cache_bytes=...)``
+    and of the audit's cache-budget report: per-device BSP state tables
+    times the batch width, plus the Phase 3 persistent working set, times
+    ``n_parts`` devices.  ``key`` is a solver bucket key
+    ``(e_cap, n_parts, n_levels, caps)``.
+    """
+    e_cap, n_parts, _n_levels, caps = key[0], key[1], key[2], key[3]
+    b = int(batch or 1)
+    cost = pallas_cost_model(
+        int(e_cap), b, n_parts=int(n_parts), sharded=bool(sharded),
+        p3v_cap=(getattr(caps, "p3v_cap", 0) or int(e_cap)))
+    per_device = engine_state_bytes(caps) * b + cost["phase3_state_bytes"]
+    return int(per_device) * int(n_parts)
+
+
+# ----------------------------------------------------------------------
 # per-program audit
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
@@ -415,14 +465,23 @@ def audit_program(eng, pg, e_cap: int, batch: Optional[int] = None,
 # ----------------------------------------------------------------------
 # whole-bucket audit (what prewarm would compile)
 # ----------------------------------------------------------------------
-def audit_graph(solver, graph, widths: Optional[Sequence[int]] = None,
+def audit_graph(solver, graph, widths=None,
                 check_donation: bool = True) -> Dict[str, Any]:
     """Audit every ``(bucket, width)`` program of ``graph``'s bucket.
 
     ``widths`` defaults to the solver's ``width_ladder`` — the same set
-    :meth:`EulerSolver.prewarm` compiles.  Builds a bare engine for the
-    bucket (same caps/levels/flags as the solver's, minus the accounting
-    probes) so auditing never perturbs ``cache_stats``.
+    :meth:`EulerSolver.prewarm` compiles.  Pass the string ``"warmed"``
+    to audit the *adaptive* program set instead: exactly the widths the
+    autotuner's compile service has landed so far
+    (``solver.warmed_widths``; falls back to width 1 when the bucket has
+    no live programs yet).  Builds a bare engine for the bucket (same
+    caps/levels/flags as the solver's, minus the accounting probes) so
+    auditing never perturbs ``cache_stats``.
+
+    The report's ``cache_budget`` section prices each audited program
+    with :func:`program_cost_bytes` and totals them against the solver's
+    ``program_cache_bytes`` budget (``within_budget`` is None when no
+    budget is set).
     """
     import jax
 
@@ -430,20 +489,35 @@ def audit_graph(solver, graph, widths: Optional[Sequence[int]] = None,
 
     pg, tree, key = solver._prepare(graph, None)
     e_cap, n_parts, n_levels, caps = key
+    sharded = bool(getattr(solver, "sharded_phase3", False))
     eng = DistributedEngine(
         solver.mesh, tuple(solver.mesh.axis_names), caps, n_levels,
         remote_dedup=solver.remote_dedup,
         deferred_transfer=solver.deferred_transfer,
-        sharded_phase3=getattr(solver, "sharded_phase3", False),
+        sharded_phase3=sharded,
         gather_circuit=getattr(solver, "gather_circuit", True),
     )
-    widths = solver.width_ladder if widths is None else widths
+    if widths is None:
+        widths = solver.width_ladder
+    elif isinstance(widths, str):
+        if widths != "warmed":
+            raise ValueError(f"widths must be a sequence or 'warmed': "
+                             f"{widths!r}")
+        widths = solver.warmed_widths(key) or [1]
     programs = []
+    per_program_bytes: Dict[str, int] = {}
+    total_bytes = 0
     for w in sorted({int(w) for w in widths}):
         batch = None if w == 1 else w
-        programs.append(audit_program(
+        p = audit_program(
             eng, pg, e_cap, batch=batch,
-            check_donation=check_donation and batch is None))
+            check_donation=check_donation and batch is None)
+        cost = program_cost_bytes(key, batch, sharded=sharded)
+        p.cost["program_bytes"] = cost
+        per_program_bytes[f"B{w}"] = cost
+        total_bytes += cost
+        programs.append(p)
+    budget = getattr(solver, "program_cache_bytes", None)
     return {
         "jax": jax.__version__,
         "backend": jax.default_backend(),
@@ -458,5 +532,13 @@ def audit_graph(solver, graph, widths: Optional[Sequence[int]] = None,
                                            True)),
         },
         "programs": [p.to_dict() for p in programs],
+        "cache_budget": {
+            "per_program_bytes": per_program_bytes,
+            "total_bytes": total_bytes,
+            "budget_bytes": budget,
+            "program_cache_max": getattr(solver, "program_cache_max", None),
+            "within_budget": (None if budget is None
+                              else total_bytes <= budget),
+        },
         "ok": all(p.ok for p in programs),
     }

@@ -1016,10 +1016,25 @@ class DistributedEngine:
             )
         return self._p3
 
-    def _dispatch(self, pg: PartitionedGraph,
-                  resident: bool = True) -> PendingRun:
-        """Dispatch ONE fused run asynchronously; no host sync happens
-        until :meth:`PendingRun.wait`.
+    def fused_program(self, num_edges: int, batch: Optional[int] = None,
+                      donate: bool = False):
+        """Get-or-create the fused jit program for ``(num_edges, batch,
+        donate)`` *without calling it* — the compile itself (XLA lowering
+        on first call) belongs to whoever invokes the returned program."""
+        key = (num_edges, batch, donate)
+        prog = self._fused.get(key)
+        if prog is None:
+            prog = self._fused[key] = self.make_fused(
+                num_edges, batch=batch, donate=donate)
+        return prog
+
+    def _stage(self, pg: PartitionedGraph, resident: bool = True) -> tuple:
+        """Host-side half of a single-graph dispatch: input prep, upload /
+        device-state caching, program lookup.  Touches the engine caches,
+        so the solver calls it under its session lock; the returned staged
+        tuple is then executed by :meth:`_launch` *outside* the lock (the
+        program call is where a cold program compiles, and a background
+        prewarm compile must not block serving dispatches — DESIGN.md §12).
 
         ``resident=True`` (default) caches the uploaded device state on
         the ``_load_cached`` entry so repeat solves of the same graph
@@ -1028,7 +1043,6 @@ class DistributedEngine:
         (``donate_argnums``), so XLA may reuse the state buffers for the
         run's scratch space instead of holding two copies.
         """
-        t0 = time.perf_counter()
         ent = self._load_cached(pg)
         E = pg.graph.num_edges
         if resident:
@@ -1049,26 +1063,48 @@ class DistributedEngine:
             if self.on_upload is not None:
                 self.on_upload()
             donate = True
-        prog = self._fused.get((E, None, donate))
-        if prog is None:
-            prog = self._fused[(E, None, donate)] = \
-                self.make_fused(E, donate=donate)
+        prog = self.fused_program(E, batch=None, donate=donate)
+        return (prog, (anc, state, sv_dev), donate, [pg], [ent["tree"]], None)
+
+    def _launch(self, staged: tuple,
+                t0: Optional[float] = None) -> PendingRun:
+        """Device half of a dispatch: call the staged program (compiling
+        it on first use) and wrap the in-flight output.  Safe to run
+        outside the solver lock — jit programs are thread-safe to call."""
+        prog, args, donate, pgs, trees, batch = staged
+        if t0 is None:
+            t0 = time.perf_counter()
         if donate:
             with warnings.catch_warnings():
                 # CPU backends can't always honor donation; harmless
                 warnings.filterwarnings(
                     "ignore", message=".*donated buffer.*")
-                out = prog(anc, state, sv_dev)
+                out = prog(*args)
         else:
-            out = prog(anc, state, sv_dev)
-        return PendingRun(self, out, [pg], [ent["tree"]], t0, batch=None)
+            out = prog(*args)
+        return PendingRun(self, out, pgs, trees, t0, batch=batch)
 
-    def evict_program(self, num_edges: int, batch: Optional[int]) -> None:
+    def _dispatch(self, pg: PartitionedGraph,
+                  resident: bool = True) -> PendingRun:
+        """Dispatch ONE fused run asynchronously (stage + launch); no
+        host sync happens until :meth:`PendingRun.wait`."""
+        t0 = time.perf_counter()
+        return self._launch(self._stage(pg, resident=resident), t0)
+
+    def evict_program(self, num_edges: int, batch: Optional[int]) -> int:
         """Drop the compiled fused program(s) for ``(num_edges, batch)``
         so the solver's width-LRU frees the executable, not just its
-        accounting entry."""
-        self._fused.pop((num_edges, batch, False), None)
-        self._fused.pop((num_edges, batch, True), None)
+        accounting entry.  Returns how many jit entries were dropped."""
+        n = 0
+        for donate in (False, True):
+            if self._fused.pop((num_edges, batch, donate), None) is not None:
+                n += 1
+        return n
+
+    def live_programs(self) -> list:
+        """Sorted ``(num_edges, batch)`` pairs with a live fused program
+        (donate variants collapsed) — the audit's adaptive program set."""
+        return sorted({(E, b) for (E, b, _d) in self._fused})
 
     def _run(self, pg: PartitionedGraph, fused: bool = True):
         """Execute the full BSP run on the mesh; returns the unified
@@ -1143,19 +1179,16 @@ class DistributedEngine:
             timings={"run_s": time.perf_counter() - t0},
         )
 
-    def _dispatch_batch(self, pgs: List[PartitionedGraph]) -> PendingRun:
-        """Dispatch B same-shape runs as ONE batched fused program
-        (DESIGN.md §8) asynchronously; :meth:`PendingRun.wait` performs
-        the single host sync and yields one
-        :class:`repro.euler.result.EulerResult` per graph, byte-identical
-        to B sequential :meth:`_run` calls.
+    def _stage_batch(self, pgs: List[PartitionedGraph]) -> tuple:
+        """Host-side half of a batched dispatch (stack + ship + program
+        lookup); like :meth:`_stage`, runs under the solver lock with the
+        program call deferred to :meth:`_launch`.
 
         Every graph must lower to the same static shapes: equal edge
         count, equal merge-tree height, and the engine's (shared) caps —
         the solver guarantees this by batching within one shape bucket.
         Batched execution is fused-only; the eager oracle stays per-graph.
         """
-        t0 = time.perf_counter()
         if not pgs:
             raise ValueError("empty batch")
         E = pgs[0].graph.num_edges
@@ -1195,11 +1228,17 @@ class DistributedEngine:
             if self.on_upload is not None:
                 self.on_upload()
 
-        prog = self._fused.get((E, B, False))
-        if prog is None:
-            prog = self._fused[(E, B, False)] = self.make_fused(E, batch=B)
-        out = prog(anc, state, sv)
-        return PendingRun(self, out, list(pgs), trees, t0, batch=B)
+        prog = self.fused_program(E, batch=B)
+        return (prog, (anc, state, sv), False, list(pgs), trees, B)
+
+    def _dispatch_batch(self, pgs: List[PartitionedGraph]) -> PendingRun:
+        """Dispatch B same-shape runs as ONE batched fused program
+        (DESIGN.md §8) asynchronously (stage + launch);
+        :meth:`PendingRun.wait` performs the single host sync and yields
+        one :class:`repro.euler.result.EulerResult` per graph,
+        byte-identical to B sequential :meth:`_run` calls."""
+        t0 = time.perf_counter()
+        return self._launch(self._stage_batch(pgs), t0)
 
     def _run_batch(self, pgs: List[PartitionedGraph]):
         """Synchronous wrapper: dispatch one batched fused run, then

@@ -21,9 +21,11 @@ and §8 (batched execution).
 from ..core.engine import (DistributedEngine, EngineCaps, EngineState,
                            FusedOut, PendingRun, StepOut)
 from ..core.host_engine import HostEngine
-from .bucket import (ceil_pow2, ladder_caps, ladder_levels, ladder_rounds,
-                     ladder_waste, modal_bucket_pool, pad_graph, round_caps,
-                     strip_circuit)
+from .autotune import (AutoTuner, CompileService, CompileTicket, FlushLog,
+                       TunerParams)
+from .bucket import (ceil_pow2, ladder_caps, ladder_floors, ladder_levels,
+                     ladder_rounds, ladder_waste, modal_bucket_pool,
+                     pad_graph, round_caps, strip_circuit)
 from .result import CacheStats, EulerResult
 from .solver import (EulerSolver, PendingSolve, solve, solve_batch,
                      solve_many)
@@ -34,5 +36,7 @@ __all__ = [
     "DistributedEngine", "EngineCaps", "EngineState", "FusedOut", "StepOut",
     "HostEngine", "ceil_pow2", "modal_bucket_pool", "pad_graph",
     "round_caps", "strip_circuit",
-    "ladder_caps", "ladder_levels", "ladder_rounds", "ladder_waste",
+    "ladder_caps", "ladder_floors", "ladder_levels", "ladder_rounds",
+    "ladder_waste",
+    "AutoTuner", "CompileService", "CompileTicket", "FlushLog", "TunerParams",
 ]

@@ -1,0 +1,621 @@
+"""Adaptive serving autotuner: background compile service + ladder policy.
+
+DESIGN.md §12.  Two cooperating pieces make the warm serving path
+self-tuning instead of statically configured (``--widths`` + blocking
+prewarm):
+
+:class:`CompileService`
+    A dedicated compile thread draining a priority queue.
+    ``EulerSolver.prewarm_async`` enqueues ``(bucket, width)`` compiles
+    here, so ladder widths compile *behind* live traffic; the engine's
+    staged dispatch (programs are called outside the session lock) means
+    a background compile never blocks a serving-thread dispatch.  As each
+    width lands it appears in ``EulerSolver.warmed_widths``, and
+    ``MicroBatcher`` — which consults exactly that set — upgrades partial
+    flushes from B=1 to ladder widths mid-session.
+
+:class:`AutoTuner`
+    An online policy over EWMA-decayed per-bucket arrival and flush-size
+    histograms (fed by ``MicroBatcher``).  Each ``step()`` snapshots the
+    histograms plus the solver's cache state and runs the *pure* policy
+    function :func:`plan`, which decides
+
+      · which ``(bucket, width)`` programs to prewarm next (priority =
+        decayed flush mass routed to that width by the greedy ladder
+        decomposition, times the dispatch amortization ``(w-1)/w``),
+      · which live programs to pin against LRU/byte eviction and which
+        cold ones to drop (``EulerSolver(program_cache_bytes=...)`` makes
+        the LRU byte-aware using the audit's static cost model),
+      · which bucket scales to re-key onto the *tight* cap profile
+        (:data:`repro.euler.bucket.TIGHT_DIVISORS`): buckets whose
+        measured ``bucket_waste`` is high while their observed per-field
+        needs stay under the tight floors get their caps tightened on
+        recompile (rekey + rewarm runs on the compile thread).
+
+:class:`FlushLog`
+    Bounded dispatch-width accounting (histogram + rolling window) that
+    replaces the previously unbounded ``MicroBatcher.flushes`` list.
+
+All cross-thread state obeys the repo lint contracts: R005 (every deep
+mutation of lock-guarded attributes happens under ``self._lock``) and
+R006 (thread creation carries an explicit ``daemon=`` and a
+``thread-contract:`` comment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import queue
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .bucket import TIGHT_DIVISORS, ladder_floors
+
+__all__ = [
+    "FlushLog", "CompileTicket", "CompileService", "AutoTuner",
+    "TunerParams", "TunerSnapshot", "BucketStats", "Decision",
+    "ladder_decompose", "plan",
+]
+
+
+# ---------------------------------------------------------------------------
+# bounded flush accounting (replaces the unbounded MicroBatcher.flushes list)
+# ---------------------------------------------------------------------------
+
+
+class FlushLog:
+    """Bounded dispatch-width log for long-lived servers.
+
+    Keeps a total histogram (``hist``: width → dispatch count, at most one
+    entry per distinct width), a rolling window of the most recent
+    dispatch widths (``recent``), and the timestamp of the first wide
+    (B>1) dispatch — O(#widths + recent_max) memory for any session
+    length, unlike the list it replaces.
+
+    >>> log = FlushLog(recent_max=2, clock=lambda: 7.0)
+    >>> for w in (1, 1, 4, 1):
+    ...     log.observe(w)
+    >>> log.hist, list(log.recent), log.total, log.first_wide_t
+    ({1: 3, 4: 1}, [4, 1], 4, 7.0)
+    >>> log.mean_width(), log.widths(), log.narrow_before_wide
+    (1.75, [1, 4], 2)
+    """
+
+    def __init__(self, recent_max: int = 256,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.hist: Dict[int, int] = {}
+        self.total = 0           # dispatches observed
+        self.requests = 0        # requests covered (sum of widths)
+        self.recent: deque = deque(maxlen=int(recent_max))
+        self.first_wide_t: Optional[float] = None
+        self.narrow_before_wide = 0   # dispatches before the first wide one
+        self.clock = clock
+
+    def observe(self, width: int) -> None:
+        w = int(width)
+        self.hist[w] = self.hist.get(w, 0) + 1
+        self.total += 1
+        self.requests += w
+        self.recent.append(w)
+        if self.first_wide_t is None:
+            if w > 1:
+                self.first_wide_t = self.clock()
+            else:
+                self.narrow_before_wide += 1
+
+    def mean_width(self) -> float:
+        return self.requests / self.total if self.total else 0.0
+
+    def widths(self) -> List[int]:
+        """Sorted distinct dispatch widths seen this session."""
+        return sorted(self.hist)
+
+    def __len__(self) -> int:
+        return self.total
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"FlushLog(total={self.total}, hist={self.hist})"
+
+
+# ---------------------------------------------------------------------------
+# the background compile service
+# ---------------------------------------------------------------------------
+
+
+class CompileTicket:
+    """Completion handle for one queued compile job."""
+
+    def __init__(self, label: str):
+        self.label = label
+        self.widths: List[int] = []   # widths this job newly compiled
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        state = "done" if self.done() else "pending"
+        return f"CompileTicket({self.label}, {state})"
+
+
+class CompileService:
+    """Dedicated compile thread + priority queue (DESIGN.md §12).
+
+    Jobs are ``(priority, seq)``-ordered: higher priority first, FIFO
+    among equal priorities.  Each prewarm job compiles exactly *one*
+    ``(bucket, width)`` program via ``solver.prewarm(graph, [w])``, so
+    ``warmed_widths`` grows incrementally and the micro-batcher can
+    upgrade partial flushes as soon as the first ladder width lands —
+    not only after the whole ladder is warm.  Duplicate submissions of a
+    still-queued job return the existing ticket; already-warm widths
+    complete immediately without queueing.
+
+    With ``start=False`` the worker thread is not launched: jobs queue up
+    and run in priority order once :meth:`start` is called — this is what
+    the drain-ordering tests use to make scheduling deterministic.
+
+    Compile errors are isolated per ticket (``ticket.error``); the worker
+    thread never dies from a failed compile.
+    """
+
+    def __init__(self, solver, start: bool = True):
+        self.solver = solver
+        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._pending: Dict[object, CompileTicket] = {}
+        self._busy = 0                  # queued + running jobs
+        self._idle = threading.Event()  # set ⇔ _busy == 0
+        self._idle.set()
+        self._thread: Optional[threading.Thread] = None
+        self._stopped = False
+        self.prewarms = 0               # programs actually compiled here
+        if start:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        """Launch the worker thread (idempotent)."""
+        with self._lock:
+            if self._thread is not None or self._stopped:
+                return
+            # thread-contract: daemon (compiles hold no external resources;
+            # an abandoned compile is simply re-queued by the next session)
+            # and never joined by the serving loop — join() waits on the
+            # drained-idle event instead, and stop() enqueues a sentinel
+            # then joins at shutdown.
+            t = threading.Thread(target=self._worker,
+                                 name="compile-service", daemon=True)
+            self._thread = t
+        t.start()
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Drain queued jobs, then stop and join the worker thread."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._stopped = True
+            self._seq += 1
+            seq = self._seq
+            t = self._thread
+        # +inf sorts after every real job: the sentinel drains last
+        self._q.put((math.inf, seq, None, None, None))
+        if t is not None:
+            t.join(timeout)
+
+    def idle(self) -> bool:
+        """True when no job is queued or running."""
+        return self._idle.is_set()
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait until the queue is drained (not for thread exit)."""
+        return self._idle.wait(timeout)
+
+    def pending_jobs(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, graph, width: int, priority: float = 0.0) -> CompileTicket:
+        """Enqueue one ``(bucket(graph), width)`` compile; returns a ticket.
+
+        Already-warm widths return an immediately-completed ticket;
+        a duplicate of a still-queued job returns that job's ticket.
+        """
+        w = max(1, int(width))
+        key = self.solver.bucket_of(graph)
+        if w in self.solver.warmed_widths(key):
+            t = CompileTicket(f"prewarm[B{w}] (warm)")
+            t._done.set()
+            return t
+        jkey = (key, w)
+
+        def fn():
+            return self.solver.prewarm(graph, [w])
+
+        return self._enqueue(jkey, fn, priority, f"prewarm[B{w}]")
+
+    def submit_retune(self, graph, e_cap: int, widths: Sequence[int],
+                      priority: float = 1e9) -> CompileTicket:
+        """Enqueue a tighten-rekey job: purge the scale's prep memos, then
+        rewarm ``widths`` of the (now tight) bucket — all on the compile
+        thread, so the rekey and its recompiles stay off the serving
+        thread.  High default priority: until the tight B=1 program lands,
+        a flush of that bucket would compile inline on the serving thread.
+        """
+        ws = sorted({max(1, int(w)) for w in widths} | {1})
+        jkey = ("retune", int(e_cap))
+
+        def fn():
+            self.solver.rekey(e_cap)
+            out: List[int] = []
+            for w in ws:
+                out.extend(self.solver.prewarm(graph, [w]))
+            return out
+
+        return self._enqueue(jkey, fn, priority, f"retune[{e_cap}]")
+
+    def _enqueue(self, jkey, fn, priority: float, label: str) -> CompileTicket:
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("compile service is stopped")
+            existing = self._pending.get(jkey)
+            if existing is not None:
+                return existing
+            ticket = CompileTicket(label)
+            self._pending[jkey] = ticket
+            self._seq += 1
+            seq = self._seq
+            self._busy += 1
+            self._idle.clear()
+        self._q.put((-float(priority), seq, jkey, fn, ticket))
+        return ticket
+
+    # -- worker ------------------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            _, _, jkey, fn, ticket = self._q.get()
+            if fn is None:          # stop sentinel (drains last)
+                break
+            try:
+                ticket.widths = list(fn() or [])
+            except BaseException as exc:  # noqa: BLE001 - isolate per job
+                ticket.error = exc
+            with self._lock:
+                self._pending.pop(jkey, None)
+                self.prewarms += len(ticket.widths)
+                self._busy -= 1
+                if self._busy == 0:
+                    self._idle.set()
+            ticket._done.set()
+
+
+# ---------------------------------------------------------------------------
+# the pure ladder policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """EWMA-decayed observations for one bucket."""
+    mass: float = 0.0                                    # arrival mass
+    flushes: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunerParams:
+    """Policy knobs (see :func:`plan` for how each is used)."""
+    min_mass: float = 0.5        # buckets below this mass are ignored
+    evict_mass: float = 0.05     # ... below this are eviction candidates
+    pin_budget: int = 4          # max (bucket, width) programs pinned
+    max_prewarms: int = 4        # max prewarm orders per step
+    tighten_waste: float = 1.5   # min measured bucket_waste to tighten
+    hi_water: float = 0.9        # byte-budget fraction that triggers evicts
+    decay_tau: float = 30.0      # EWMA time constant (seconds)
+    min_interval: float = 0.25   # min seconds between policy steps
+
+
+@dataclasses.dataclass
+class TunerSnapshot:
+    """Everything :func:`plan` sees — fabricable in tests.
+
+    Bucket keys only need ``key[0] == e_cap`` and ``key[1] == n_parts``;
+    the policy never looks past the first two slots, so test fixtures can
+    use plain tuples.
+    """
+    buckets: Dict[object, BucketStats]
+    warmed: Dict[object, List[int]]          # key -> live widths (incl. 1)
+    pinned: List[Tuple[object, int]]
+    bytes_used: int = 0
+    bytes_budget: Optional[int] = None
+    max_batch: int = 8
+    waste: Dict[object, float] = dataclasses.field(default_factory=dict)
+    field_max: Dict[int, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)                # e_cap -> observed raw caps
+    tightened: Set[int] = dataclasses.field(default_factory=set)
+    slack: float = 1.3
+
+
+@dataclasses.dataclass
+class Decision:
+    """One policy step's orders, applied by :class:`AutoTuner`."""
+    prewarm: List[Tuple[object, int, float]] = dataclasses.field(
+        default_factory=list)                # (key, width, priority)
+    pin: List[Tuple[object, int]] = dataclasses.field(default_factory=list)
+    unpin: List[Tuple[object, int]] = dataclasses.field(default_factory=list)
+    evict: List[Tuple[object, int]] = dataclasses.field(default_factory=list)
+    tighten: List[int] = dataclasses.field(default_factory=list)  # e_caps
+
+    def empty(self) -> bool:
+        return not (self.prewarm or self.pin or self.unpin or
+                    self.evict or self.tighten)
+
+
+def ladder_decompose(n: int, max_batch: int) -> List[int]:
+    """Greedy pow2 ladder decomposition of an n-request flush — the width
+    sequence ``MicroBatcher`` would dispatch if the whole ladder were warm.
+
+    >>> ladder_decompose(5, 8)
+    [4, 1]
+    >>> ladder_decompose(13, 8)
+    [8, 4, 1]
+    >>> ladder_decompose(4, 4)
+    [4]
+    """
+    out: List[int] = []
+    n = int(n)
+    w = 1
+    while w * 2 <= int(max_batch):
+        w *= 2
+    while n > 0:
+        while w > n:
+            w //= 2
+        out.append(w)
+        n -= w
+    return out
+
+
+def plan(snap: TunerSnapshot, params: TunerParams = TunerParams()) -> Decision:
+    """The pure ladder policy: snapshot → orders.  Deterministic (ties
+    break on stable sort order), side-effect free, unit-testable from
+    fabricated histograms.
+
+    Rules:
+
+    * **benefit** of ``(bucket, w>1)`` = EWMA flush mass the greedy ladder
+      routes to width ``w``, times the dispatch amortization ``(w-1)/w``;
+      the hot bucket's B=1 fallback gets a small mass-proportional benefit
+      so it pins behind the wide widths.
+    * **prewarm**: the highest-benefit un-warmed widths of buckets with
+      mass ≥ ``min_mass``, at most ``max_prewarms`` per step, priority =
+      benefit.
+    * **pin**: the top ``pin_budget`` warmed programs by benefit; anything
+      currently pinned but no longer in that set is unpinned.
+    * **evict**: when a byte budget is set and usage exceeds
+      ``hi_water × budget``, the warmed widths of buckets whose mass
+      decayed below ``evict_mass`` are dropped (widest first).
+    * **tighten**: a hot bucket whose measured ``bucket_waste`` is ≥
+      ``tighten_waste`` while every observed raw cap need fits the tight
+      floor profile is re-keyed onto :data:`TIGHT_DIVISORS` — the tight
+      caps still cover every member seen, so the tightened bucket's waste
+      lands under threshold on recompile.
+    """
+    dec = Decision()
+    benefit: Dict[Tuple[object, int], float] = {}
+    hot = [(key, st) for key, st in snap.buckets.items()
+           if st.mass >= params.min_mass]
+    for key, st in hot:
+        for n, m in st.flushes.items():
+            for w in ladder_decompose(n, snap.max_batch):
+                if w > 1:
+                    k = (key, w)
+                    benefit[k] = benefit.get(k, 0.0) + m * (w - 1.0) / w
+        # the hot bucket's B=1 fallback program: small benefit so it pins
+        # after the wide widths but ahead of cold buckets' entries
+        k1 = (key, 1)
+        benefit[k1] = benefit.get(k1, 0.0) + 0.01 * st.mass
+    ranked = sorted(benefit.items(), key=lambda kv: (-kv[1], -kv[0][1]))
+
+    warmed = {key: set(ws) for key, ws in snap.warmed.items()}
+    for (key, w), b in ranked:
+        if len(dec.prewarm) >= params.max_prewarms:
+            break
+        if w > 1 and b > 0 and w not in warmed.get(key, set()):
+            dec.prewarm.append((key, w, b))
+
+    pin_set = {(key, w) for (key, w), b in ranked[:params.pin_budget]
+               if b > 0 and w in warmed.get(key, set())}
+    already = set(snap.pinned)
+    dec.pin = sorted(pin_set - already, key=str)
+    dec.unpin = sorted(already - pin_set, key=str)
+
+    pressured = (snap.bytes_budget is not None and
+                 snap.bytes_used > params.hi_water * snap.bytes_budget)
+    if pressured:
+        for key, st in snap.buckets.items():
+            if st.mass >= params.evict_mass:
+                continue
+            for w in sorted(warmed.get(key, set()), reverse=True):
+                if (key, w) not in pin_set:
+                    dec.evict.append((key, w))
+
+    for key, _st in hot:
+        e_cap, n_parts = int(key[0]), int(key[1])
+        waste = snap.waste.get(key, 0.0)
+        if e_cap in snap.tightened or waste < params.tighten_waste:
+            continue
+        obs = snap.field_max.get(e_cap)
+        if not obs:
+            continue
+        floors = ladder_floors(e_cap, n_parts, slack=snap.slack, tight=True)
+        fields = [f for f in TIGHT_DIVISORS if obs.get(f)]
+        if fields and all(obs[f] <= floors[f] for f in fields):
+            dec.tighten.append(e_cap)
+    return dec
+
+
+# ---------------------------------------------------------------------------
+# the online tuner
+# ---------------------------------------------------------------------------
+
+
+class AutoTuner:
+    """Online ladder policy driver (DESIGN.md §12).
+
+    The serving thread feeds it (``MicroBatcher`` calls
+    :meth:`observe_arrival` / :meth:`observe_flush`) and calls
+    :meth:`step` once per loop iteration; ``step`` rate-limits itself
+    (``params.min_interval``), EWMA-decays the histograms, snapshots the
+    solver's cache state, runs :func:`plan`, and applies the orders —
+    prewarm/retune jobs go to the shared :class:`CompileService`, pin /
+    unpin / drop act on the solver's program LRU directly.
+    """
+
+    #: bound on tracked buckets: coldest are dropped past this
+    MAX_BUCKETS = 64
+
+    def __init__(self, solver, service: Optional[CompileService] = None,
+                 max_batch: int = 8, params: TunerParams = TunerParams(),
+                 clock: Callable[[], float] = time.perf_counter):
+        self.solver = solver
+        self.service = service if service is not None \
+            else solver._ensure_compile_service()
+        self.max_batch = int(max_batch)
+        self.params = params
+        self.clock = clock
+        self._lock = threading.RLock()   # re-entered by the _*_locked helpers
+        self._buckets: Dict[object, BucketStats] = {}
+        self._rep: Dict[object, object] = {}   # key -> representative graph
+        self._last_decay: Optional[float] = None
+        self._last_step: Optional[float] = None
+        self.steps = 0                 # policy evaluations
+        self.last_decision: Optional[Decision] = None
+
+    # -- observations (serving thread) ------------------------------------
+
+    def observe_arrival(self, key, graph=None) -> None:
+        with self._lock:
+            st = self._buckets.get(key)
+            if st is None:
+                st = self._buckets[key] = BucketStats()
+            st.mass += 1.0
+            if graph is not None and key not in self._rep:
+                self._rep[key] = graph
+
+    def observe_flush(self, key, n: int) -> None:
+        if n <= 0:
+            return
+        with self._lock:
+            st = self._buckets.get(key)
+            if st is None:
+                st = self._buckets[key] = BucketStats()
+            st.flushes[int(n)] = st.flushes.get(int(n), 0.0) + 1.0
+
+    # -- policy step -------------------------------------------------------
+
+    def step(self, force: bool = False) -> Optional[Decision]:
+        """Run one rate-limited policy step; returns the applied
+        :class:`Decision` (or None when skipped by the rate limit)."""
+        now = self.clock()
+        with self._lock:
+            if not force and self._last_step is not None and \
+                    now - self._last_step < self.params.min_interval:
+                return None
+            self._last_step = now
+            self._decay_locked(now)
+            snap = self._snapshot_locked()
+            reps = dict(self._rep)
+        dec = plan(snap, self.params)
+        self._apply(dec, reps)
+        self.steps += 1
+        self.last_decision = dec
+        return dec
+
+    def _decay_locked(self, now: float) -> None:
+        # called with the (reentrant) lock held; re-enters for R005
+        with self._lock:
+            last = self._last_decay
+            self._last_decay = now
+            if last is None:
+                return
+            f = math.exp(-max(0.0, now - last) / self.params.decay_tau)
+            for st in self._buckets.values():
+                st.mass *= f
+                for n in list(st.flushes):
+                    st.flushes[n] *= f
+            if len(self._buckets) > self.MAX_BUCKETS:
+                keep = sorted(self._buckets.items(),
+                              key=lambda kv: -kv[1].mass)[:self.MAX_BUCKETS]
+                dropped = set(self._buckets) - {k for k, _ in keep}
+                for k in dropped:
+                    self._buckets.pop(k)
+                    self._rep.pop(k, None)
+
+    def _snapshot_locked(self) -> TunerSnapshot:
+        s = self.solver
+        with self._lock:
+            buckets = {k: BucketStats(st.mass, dict(st.flushes))
+                       for k, st in self._buckets.items()}
+        return TunerSnapshot(
+            buckets=buckets,
+            warmed={k: s.warmed_widths(k) for k in buckets},
+            pinned=s.pinned_programs(),
+            bytes_used=s.cache_bytes_used(),
+            bytes_budget=s.program_cache_bytes,
+            max_batch=self.max_batch,
+            waste=dict(s.bucket_waste),
+            field_max={e: s.cap_observations(e)
+                       for e in {int(k[0]) for k in buckets}},
+            tightened=set(s.tightened_scales()),
+            slack=s.slack,
+        )
+
+    def _apply(self, dec: Decision, reps: Dict[object, object]) -> None:
+        s = self.solver
+        for key, w in dec.unpin:
+            s.unpin_program(key, w)
+        for key, w in dec.pin:
+            s.pin_program(key, w)
+        for key, w in dec.evict:
+            s.drop_program(key, w)
+        for key, w, pr in dec.prewarm:
+            g = reps.get(key)
+            if g is not None:
+                self.service.submit(g, w, priority=pr)
+        for e_cap in dec.tighten:
+            if not s.tighten(e_cap):
+                continue
+            key = next((k for k in reps if int(k[0]) == int(e_cap)), None)
+            if key is not None:
+                widths = sorted(set(s.warmed_widths(key)) | {1})
+                self.service.submit_retune(reps[key], e_cap, widths)
+
+    # -- introspection / shutdown -----------------------------------------
+
+    def stats(self) -> dict:
+        """Session counters for ``--json`` / benchmark reporting."""
+        s = self.solver
+        with self._lock:
+            n_buckets = len(self._buckets)
+        return {
+            "tuner_steps": self.steps,
+            "tuner_buckets": n_buckets,
+            "async_prewarms": self.service.prewarms,
+            "prewarm_queue": self.service.pending_jobs(),
+            "pinned": len(s.pinned_programs()),
+            "tightened_scales": s.tightened_scales(),
+            "cache_bytes": s.cache_bytes_used(),
+            "cache_bytes_budget": s.program_cache_bytes,
+        }
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        self.service.stop(timeout)

@@ -108,6 +108,26 @@ LADDER_DIVISORS = {
     "p3v_cap": 1,
 }
 
+#: Tight-profile divisors: the autotuner's feedback rung (DESIGN.md §12).
+#: Buckets whose *measured* per-field needs sit comfortably under half the
+#: default floors get re-keyed onto this profile — halved floors across the
+#: board — cutting the padded table area roughly in half for pools whose
+#: shapes cluster well below the calibrated worst case.  Correctness never
+#: depends on the profile: a field exceeding its floor still pow2-escapes.
+TIGHT_DIVISORS = {
+    "park_cap": 8,
+    "ship_cap": 8,
+    "open_cap": 8,
+    "open_ship_cap": 8,
+    "touch_cap": 2,
+    "touch_ship_cap": 2,
+    "p3v_cap": 2,
+}
+
+#: Cap fields the ladder sizes (and the autotuner observes per solve).
+LADDER_FIELDS = ("edge_cap", "park_cap", "ship_cap", "new_cap", "open_cap",
+                 "touch_cap", "open_ship_cap", "touch_ship_cap", "p3v_cap")
+
 
 def _edge_floor(e_cap: int, n_parts: int, slack: float) -> int:
     """Worst-case padded local-edge table width over a bucket, rounded up
@@ -121,8 +141,33 @@ def _edge_floor(e_cap: int, n_parts: int, slack: float) -> int:
     return min(e_cap, rung * math.ceil(need / rung))
 
 
+def ladder_floors(e_cap: int, n_parts: int, slack: float = 1.3,
+                  lo: int = 16, tight: bool = False) -> dict:
+    """Per-field cap floors for one bucket scale — the rungs
+    :func:`ladder_caps` quantizes onto, exposed so the autotuner can test
+    whether a bucket's *observed* needs fit the ``tight`` profile before
+    re-keying it (DESIGN.md §12).  edge/new share the worst-case
+    padded-partition rung (profile-independent); the divisor fields use
+    :data:`LADDER_DIVISORS` or :data:`TIGHT_DIVISORS`.
+
+    >>> f = ladder_floors(128, 8)
+    >>> f["park_cap"], f["touch_cap"]
+    (32, 128)
+    >>> t = ladder_floors(128, 8, tight=True)
+    >>> t["park_cap"], t["touch_cap"]
+    (16, 64)
+    """
+    div = TIGHT_DIVISORS if tight else LADDER_DIVISORS
+    ef = max(_edge_floor(e_cap, n_parts, slack), lo)
+    floors = {"edge_cap": ef, "new_cap": ef}
+    for f, d in div.items():
+        floors[f] = max(e_cap // d, lo)
+    return floors
+
+
 def ladder_caps(caps: EngineCaps, e_cap: int, n_parts: int,
-                slack: float = 1.3, lo: int = 16) -> EngineCaps:
+                slack: float = 1.3, lo: int = 16,
+                tight: bool = False) -> EngineCaps:
     """Quantize every table capacity onto the bucket's shared cap ladder.
 
     Unlike :func:`round_caps` (independent pow2 per field), all fields are
@@ -150,22 +195,20 @@ def ladder_caps(caps: EngineCaps, e_cap: int, n_parts: int,
     True
     >>> ladder_caps(a, 128, 8).park_cap                    # e_cap/4 floor
     32
+    >>> ladder_caps(a, 128, 8, tight=True).park_cap        # tight: e_cap/8
+    16
+    >>> ladder_caps(a, 128, 8, tight=True).touch_cap       # tight: e_cap/2
+    64
     """
-    ef = max(_edge_floor(e_cap, n_parts, slack), lo)
+    floors = ladder_floors(e_cap, n_parts, slack=slack, lo=lo, tight=tight)
 
     def q(v: int, floor: int) -> int:
         if not v:
             return 0
-        floor = max(int(floor), lo)
         return floor if v <= floor else ceil_pow2(v, lo)
 
     return dataclasses.replace(
-        caps,
-        edge_cap=q(caps.edge_cap, ef),
-        new_cap=q(caps.new_cap, ef),
-        **{f: q(getattr(caps, f), e_cap // d)
-           for f, d in LADDER_DIVISORS.items()},
-    )
+        caps, **{f: q(getattr(caps, f), fl) for f, fl in floors.items()})
 
 
 def ladder_rounds(caps: EngineCaps, e_cap: int) -> EngineCaps:

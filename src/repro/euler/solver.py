@@ -52,8 +52,9 @@ from ..core.graph import Graph, partition_graph
 from ..core.host_engine import HostEngine
 from ..core.phase2 import generate_merge_tree
 from ..graphgen.partition import partition_vertices
-from .bucket import (ceil_pow2, ladder_caps, ladder_levels, ladder_rounds,
-                     ladder_waste, pad_graph, round_caps, strip_circuit)
+from .bucket import (LADDER_FIELDS, ceil_pow2, ladder_caps, ladder_levels,
+                     ladder_rounds, ladder_waste, pad_graph, round_caps,
+                     strip_circuit)
 from .result import CacheStats, EulerResult
 
 BucketKey = Tuple[int, int, int, EngineCaps]   # (e_cap, n_parts, n_levels, caps)
@@ -177,6 +178,13 @@ class EulerSolver:
     program_cache_max:  LRU cap on compiled ``(bucket, B)`` programs;
                         evictions drop the executable and are counted in
                         cache stats.
+    program_cache_bytes: optional byte budget for the program LRU, using
+                        the audit's static per-program cost model
+                        (``repro.analysis.jaxpr_audit.program_cost_bytes``)
+                        — exceeding it evicts least-recently-used
+                        programs just like the count cap.  Programs pinned
+                        by the autotuner (:meth:`pin_program`) survive
+                        both caps.  ``None`` (default) = count cap only.
     device_resident:    keep each prepared graph's initial device state
                         cached on device (repeat solves skip the
                         host→device upload); off = donate a fresh upload
@@ -210,6 +218,7 @@ class EulerSolver:
         ladder_waste_cap: float = 4.0,
         width_ladder: Sequence[int] = (1, 2, 4),
         program_cache_max: int = 32,
+        program_cache_bytes: Optional[int] = None,
         device_resident: bool = True,
         sharded_phase3: Optional[bool] = None,
         gather_circuit: bool = True,
@@ -229,6 +238,8 @@ class EulerSolver:
         self.ladder_waste_cap = float(ladder_waste_cap)
         self.width_ladder = tuple(sorted({int(w) for w in width_ladder}))
         self.program_cache_max = int(program_cache_max)
+        self.program_cache_bytes = (None if program_cache_bytes is None
+                                    else int(program_cache_bytes))
         self.device_resident = device_resident
         self._mesh = mesh
         if n_parts is None:
@@ -277,11 +288,26 @@ class EulerSolver:
         self._prep_cache_max = 64
         # measured quantized/exact table-area ratio per bucket key
         self.bucket_waste: dict = {}
+        # byte-aware budget bookkeeping for the program LRU: modeled bytes
+        # per live (bucket, B) program + running total, and the pin set
+        # the autotuner protects from eviction (DESIGN.md §12)
+        self._program_bytes: dict = {}
+        self._bytes_total = 0
+        self._pinned: set = set()
+        # autotuner feedback rung: bucket scales re-keyed onto the tight
+        # cap profile, and the max *raw* (pre-quantization) cap needs
+        # observed per scale that justify doing so
+        self._tight_scales: set = set()
+        self._field_max: dict = {}
+        # lazily-created background compile service (prewarm_async)
+        self._compile_service = None
         self.cache_stats = CacheStats()
         # one solver may be driven from a serving thread and a background
-        # prewarm thread at once: the lock serializes host-side mutation
-        # (prep memo, program accounting, dispatch); device waits happen
-        # outside it so prewarm compiles overlap in-flight runs.
+        # compile thread at once: the lock serializes host-side mutation
+        # (prep memo, program accounting, dispatch staging); program
+        # *calls* — where cold programs compile — and device waits happen
+        # outside it, so background compiles never block a serving
+        # dispatch (DESIGN.md §12).
         self._lock = threading.RLock()
 
     # ------------------------------------------------------------------
@@ -342,11 +368,20 @@ class EulerSolver:
                 n_levels = ladder_levels(n_levels)
             raw = DistributedEngine.size_caps(pg, slack=self.slack)
             rounded = round_caps(raw)
+            # record the max raw (pre-quantization, slack-inclusive) need
+            # per cap field at this scale — the autotuner's evidence that
+            # a bucket's members all fit the tight floor profile
+            obs = self._field_max.setdefault(e_cap, {})
+            for f in LADDER_FIELDS:
+                v = int(getattr(raw, f))
+                if v > obs.get(f, 0):
+                    obs[f] = v
             caps = rounded
             waste = 1.0
             if self.cap_ladder:
                 quant = ladder_caps(raw, e_cap, self.n_parts,
-                                    slack=self.slack)
+                                    slack=self.slack,
+                                    tight=e_cap in self._tight_scales)
                 waste = ladder_waste(rounded, quant)
                 if waste <= self.ladder_waste_cap:
                     caps = quant        # outlier shapes keep pow2 keying
@@ -403,17 +438,62 @@ class EulerSolver:
                     evicted = next(iter(self._engines))
                     self._engines.pop(evicted)
                     for p in [p for p in self._programs if p[0] == evicted]:
-                        del self._programs[p]
-                        self.cache_stats.evictions += 1
+                        self._evict_entry(p)   # engine gone: pins included
                 self._engines[key] = eng
             return eng
+
+    def _program_cost(self, key: BucketKey, batch: Optional[int]) -> int:
+        """Modeled device bytes of one cached program (the audit's static
+        cost model); 0 when the key is not a real bucket key (unit-test
+        fakes) or the analysis layer is unavailable."""
+        try:
+            from ..analysis.jaxpr_audit import program_cost_bytes
+
+            return int(program_cost_bytes(key, batch,
+                                          sharded=self.sharded_phase3))
+        except Exception:
+            return 0
+
+    def _evict_entry(self, pkey) -> None:
+        """Drop one (bucket, B) program — LRU entry, modeled bytes, pin
+        mark, and the engine's compiled executable."""
+        with self._lock:
+            self._programs.pop(pkey, None)
+            self._bytes_total -= self._program_bytes.pop(pkey, 0)
+            self._pinned.discard(pkey)
+            k_old, b_old = pkey
+            old_eng = self._engines.get(k_old)
+            if old_eng is not None:
+                old_eng.evict_program(k_old[0], b_old)
+            self.cache_stats.evictions += 1
+
+    def _evict_to_budget(self, keep=None) -> None:
+        """Evict LRU-first until both the count cap and (when set) the
+        byte budget hold; pinned programs and ``keep`` are exempt."""
+        with self._lock:
+            def victims():
+                return [p for p in self._programs
+                        if p != keep and p not in self._pinned]
+
+            while len(self._programs) > self.program_cache_max:
+                vs = victims()
+                if not vs:
+                    break
+                self._evict_entry(vs[0])
+            if self.program_cache_bytes is not None:
+                while self._bytes_total > self.program_cache_bytes:
+                    vs = victims()
+                    if not vs:
+                        break
+                    self._evict_entry(vs[0])
 
     def _account(self, key: BucketKey, batch: Optional[int]) -> bool:
         """Record a solve against the ``(bucket, B)`` program LRU;
         returns whether that program already existed (a cache hit).  A
-        miss that overflows ``program_cache_max`` evicts the
-        least-recently-used program — executable included — and counts it
-        in ``cache_stats.evictions``."""
+        miss that overflows ``program_cache_max`` — or, when
+        ``program_cache_bytes`` is set, the modeled byte budget — evicts
+        least-recently-used unpinned programs, executable included,
+        counted in ``cache_stats.evictions``."""
         with self._lock:
             pkey = (key, batch)
             hit = pkey in self._programs
@@ -422,13 +502,11 @@ class EulerSolver:
                 self._programs.move_to_end(pkey)
             else:
                 self.cache_stats.misses += 1
-                while len(self._programs) >= self.program_cache_max:
-                    (k_old, b_old), _ = self._programs.popitem(last=False)
-                    old_eng = self._engines.get(k_old)
-                    if old_eng is not None:
-                        old_eng.evict_program(k_old[0], b_old)
-                    self.cache_stats.evictions += 1
                 self._programs[pkey] = True
+                cost = self._program_cost(key, batch)
+                self._program_bytes[pkey] = cost
+                self._bytes_total += cost
+                self._evict_to_budget(keep=pkey)
             return hit
 
     # ------------------------------------------------------------------
@@ -470,6 +548,127 @@ class EulerSolver:
                 self.cache_stats.prewarms += 1
             compiled.append(w)
         return compiled
+
+    def prewarm_async(self, graph: Graph,
+                      widths: Optional[Sequence[int]] = None,
+                      priority: float = 0.0) -> list:
+        """Enqueue :meth:`prewarm` compiles on the session's background
+        compile service (:class:`repro.euler.autotune.CompileService`),
+        one job per width, and return a ``CompileTicket`` per width.
+
+        The compiles run on the dedicated compile thread *behind* live
+        traffic — staged dispatch keeps program calls outside the session
+        lock, so a background compile never blocks a serving dispatch —
+        and each width lands in :meth:`warmed_widths` as it completes, so
+        the micro-batcher upgrades partial flushes mid-session.
+        Already-warm widths return completed tickets immediately.
+        """
+        svc = self._ensure_compile_service()
+        widths = self.width_ladder if widths is None else widths
+        return [svc.submit(graph, w, priority=priority)
+                for w in sorted({max(1, int(w)) for w in widths})]
+
+    def _ensure_compile_service(self):
+        """The session's lazily-created background compile service."""
+        from .autotune import CompileService
+
+        with self._lock:
+            if self._compile_service is None:
+                self._compile_service = CompileService(self)
+            return self._compile_service
+
+    @property
+    def compile_service(self):
+        """The background compile service, or None if never used."""
+        with self._lock:
+            return self._compile_service
+
+    # ------------------------------------------------------------------
+    # byte-aware program budget: pins, explicit drops, usage (DESIGN §12)
+    # ------------------------------------------------------------------
+    def cache_bytes_used(self) -> int:
+        """Modeled device bytes of all live cached programs."""
+        with self._lock:
+            return self._bytes_total
+
+    def pin_program(self, key: BucketKey, width: int) -> bool:
+        """Protect a live ``(bucket, width)`` program from LRU/byte
+        eviction (autotuner policy); False if no such program is live."""
+        b = None if int(width) <= 1 else int(width)
+        with self._lock:
+            pkey = (key, b)
+            if pkey not in self._programs:
+                return False
+            self._pinned.add(pkey)
+            return True
+
+    def unpin_program(self, key: BucketKey, width: int) -> bool:
+        """Release a pin; returns whether it was pinned."""
+        b = None if int(width) <= 1 else int(width)
+        with self._lock:
+            pkey = (key, b)
+            was = pkey in self._pinned
+            self._pinned.discard(pkey)
+            return was
+
+    def pinned_programs(self) -> List[Tuple[BucketKey, int]]:
+        """Live pinned programs as ``(bucket, width)`` pairs."""
+        with self._lock:
+            return sorted(((k, 1 if b is None else b)
+                           for (k, b) in self._pinned), key=str)
+
+    def drop_program(self, key: BucketKey, width: int) -> bool:
+        """Explicitly evict one ``(bucket, width)`` program (autotuner
+        policy for cold entries); pinned or absent programs are left
+        alone (returns False)."""
+        b = None if int(width) <= 1 else int(width)
+        with self._lock:
+            pkey = (key, b)
+            if pkey not in self._programs or pkey in self._pinned:
+                return False
+            self._evict_entry(pkey)
+            return True
+
+    # ------------------------------------------------------------------
+    # the ladder's feedback rung: tighten well-fitting buckets (DESIGN §12)
+    # ------------------------------------------------------------------
+    def cap_observations(self, e_cap: int) -> dict:
+        """Max observed *raw* (pre-quantization, slack-inclusive) cap need
+        per ladder field at this bucket scale — evidence for the
+        autotuner's tighten decision."""
+        with self._lock:
+            return dict(self._field_max.get(int(e_cap), {}))
+
+    def tighten(self, e_cap: int) -> bool:
+        """Switch a bucket scale to the tight cap profile
+        (:data:`repro.euler.bucket.TIGHT_DIVISORS`) for future preps.
+        Graphs already memoized keep their old bucket until
+        :meth:`rekey` purges the scale — the two-step split lets the
+        tight bucket's programs compile (on the compile thread) before
+        any serving flush re-keys onto them.  Returns False if already
+        tight."""
+        with self._lock:
+            e = int(e_cap)
+            if e in self._tight_scales:
+                return False
+            self._tight_scales.add(e)
+            return True
+
+    def tightened_scales(self) -> List[int]:
+        with self._lock:
+            return sorted(self._tight_scales)
+
+    def rekey(self, e_cap: int) -> int:
+        """Purge the prep memos of every pooled graph at this scale so
+        their next solve re-buckets under the current (tight) profile;
+        returns how many memo entries were purged."""
+        with self._lock:
+            e = int(e_cap)
+            stale = [gid for gid, (_g, out) in self._prep_cache.items()
+                     if out[2][0] == e]
+            for gid in stale:
+                self._prep_cache.pop(gid)
+            return len(stale)
 
     # ------------------------------------------------------------------
     def solve(self, graph: Graph,
@@ -535,7 +734,11 @@ class EulerSolver:
             t_prep = time.perf_counter() - t0
             eng = self._engine_for(key)
             hit = self._account(key, None)
-            run = eng._dispatch(pg, resident=self.device_resident)
+            staged = eng._stage(pg, resident=self.device_resident)
+        # program call OUTSIDE the session lock: a cold program compiles
+        # here, so background prewarm compiles (the compile service) never
+        # block a concurrent serving dispatch (DESIGN.md §12)
+        run = eng._launch(staged, t0)
         return PendingSolve(self, run, [graph], key, hit, t0, t_prep, 1)
 
     def solve_batch(self, graphs: Iterable[Graph],
@@ -599,7 +802,9 @@ class EulerSolver:
             B = len(graphs)
             eng = self._engine_for(key)
             hit = self._account(key, B)
-            run = eng._dispatch_batch([p[0] for p in preps])
+            staged = eng._stage_batch([p[0] for p in preps])
+        # see solve_async: compile/dispatch happens outside the lock
+        run = eng._launch(staged, t0)
         return PendingSolve(self, run, graphs, key, hit, t0, t_prep, B)
 
     def solve_many(self, graphs: Iterable[Graph],

@@ -63,11 +63,21 @@ class MicroBatcher:
     Mixed buckets never share a flush — each bucket queue is
     independent — so no request is padded up to a foreign shape
     (DESIGN.md §8).
+
+    With ``autotuner=`` set (an :class:`repro.euler.autotune.AutoTuner`),
+    the batcher feeds it per-bucket arrival and flush-size observations;
+    the tuner's policy then prewarms ladder widths on the background
+    compile service, and — because ``_widths_for`` consults
+    ``warmed_widths`` on every flush — partial flushes upgrade from B=1
+    to ladder widths mid-session as compiles land (DESIGN.md §12).
     """
 
     def __init__(self, solver, max_batch: int = 8,
                  deadline_s: float = 0.010, clock=time.perf_counter,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2, autotuner=None,
+                 latency_window: int = 4096):
+        from ..euler.autotune import FlushLog
+
         if max_batch < 1 or pipeline_depth < 0:
             raise ValueError(
                 f"need max_batch >= 1 and pipeline_depth >= 0, got "
@@ -77,10 +87,15 @@ class MicroBatcher:
         self.deadline_s = deadline_s
         self.clock = clock
         self.pipeline_depth = pipeline_depth
+        self.autotuner = autotuner
         self.pending: dict = {}     # bucket key → [(seq, graph, t_arrival)]
         self.inflight: deque = deque()   # (PendingSolve, [seq], [t_arrival])
-        self.flushes: list = []     # per-dispatch program widths
-        self.latencies: list = []   # per-request arrival→delivery seconds
+        # bounded per-dispatch width accounting (histogram + rolling
+        # window) — a long-lived server no longer grows a per-dispatch
+        # list without bound
+        self.flushes = FlushLog(clock=clock)
+        # per-request arrival→delivery seconds, bounded rolling window
+        self.latencies: deque = deque(maxlen=int(latency_window))
 
     # -- pipeline ------------------------------------------------------
     def _harvest_one(self):
@@ -114,6 +129,8 @@ class MicroBatcher:
 
     def _flush(self, key):
         reqs = self.pending.pop(key, [])
+        if reqs and self.autotuner is not None:
+            self.autotuner.observe_flush(key, len(reqs))
         out = []
         i = 0
         while i < len(reqs):
@@ -126,7 +143,7 @@ class MicroBatcher:
                     else self.solver.solve_async(graphs[0]))
             self.inflight.append((pend, [s for s, _, _ in chunk],
                                   [t for _, _, t in chunk]))
-            self.flushes.append(w)
+            self.flushes.observe(w)
             while len(self.inflight) > self.pipeline_depth:
                 out.extend(self._harvest_one())
         return out
@@ -136,6 +153,8 @@ class MicroBatcher:
         """Queue one request; returns any results completed by the
         pipeline, plus this bucket's flush if the submission filled it."""
         key = self.solver.bucket_of(graph)
+        if self.autotuner is not None:
+            self.autotuner.observe_arrival(key, graph)
         q = self.pending.setdefault(key, [])
         q.append((seq, graph, self.clock()))
         out = self._flush(key) if len(q) >= self.max_batch else []
@@ -211,6 +230,20 @@ def main_euler(argv=None):
     ap.add_argument("--no-prewarm", action="store_true",
                     help="skip the background width-ladder prewarm "
                          "(partial flushes then run at B=1)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="self-tuning warm path (DESIGN.md §12): skip the "
+                         "cold sweep and static prewarm, serve from the "
+                         "first arrival, and let the autotuner's compile "
+                         "service warm ladder widths behind live traffic "
+                         "from the observed flush histograms")
+    ap.add_argument("--sync-prewarm", action="store_true",
+                    help="force joining the static prewarm thread before "
+                         "serving on any backend (default: join on CPU "
+                         "hosts only, detach on accelerators)")
+    ap.add_argument("--cache-bytes", type=int, default=0,
+                    help="byte budget for the compiled-program LRU using "
+                         "the audit's static cost model (0 → count-capped "
+                         "only); autotuner-pinned programs survive it")
     ap.add_argument("--arrival-hz", type=float, default=0.0,
                     help="paced request arrivals per second "
                          "(0 → closed loop: submit as fast as served)")
@@ -224,6 +257,7 @@ def main_euler(argv=None):
     import jax
 
     from ..euler import EulerSolver
+    from ..euler.autotune import AutoTuner
     from ..graphgen.eulerize import eulerian_rmat
 
     n_parts = args.parts or len(jax.devices())
@@ -231,10 +265,15 @@ def main_euler(argv=None):
     ladder = not args.no_ladder
     widths = sorted({int(w) for w in args.widths.split(",") if w}
                     | {max_batch})
+    if args.adaptive and (args.eager or max_batch <= 1):
+        raise SystemExit("--adaptive needs the fused path and "
+                         "--max-batch > 1 (there is no width ladder to "
+                         "tune otherwise)")
     solver = EulerSolver(n_parts=n_parts, fused=not args.eager,
                          cap_ladder=ladder, level_ladder=ladder,
                          straggler_cap=ladder,
-                         width_ladder=tuple(widths))
+                         width_ladder=tuple(widths),
+                         program_cache_bytes=args.cache_bytes or None)
     if args.same_bucket:
         from ..euler import modal_bucket_pool
 
@@ -260,46 +299,63 @@ def main_euler(argv=None):
           f"micro-batch ≤{max_batch}, deadline {args.deadline_ms}ms, "
           f"pipeline depth {depth}, widths {widths}")
 
-    # Cold pass: one sequential sweep compiles each bucket's B=1 program
-    # and measures cold (compile-inclusive) latency for the warm-vs-cold
-    # series.  The width ladder then pre-warms on a background thread —
-    # the batcher only ever dispatches to already-warm widths, so serving
-    # can start immediately and partial flushes upgrade from B=1 to
-    # laddered widths as programs come online.
-    t0 = time.perf_counter()
-    warm = solver.solve_many(pool)
-    warm[0].validate()
-    t_cold = time.perf_counter() - t0
-    cold_thr = len(pool) / max(t_cold, 1e-9)
-    rep = {}
-    for g, r in zip(pool, warm):
-        rep.setdefault(r.cache.bucket, g)
-    t0 = time.perf_counter()
-    if max_batch > 1 and not args.eager and not args.no_prewarm:
-        ladder_widths = [w for w in widths if w > 1]
-        # thread-contract: daemon (never blocks interpreter exit; prewarm
-        # holds no external resources and its work is safely abandoned
-        # mid-compile) and joined before the measured loop on this CPU
-        # host — compiles are GIL-bound, so overlapping them with serving
-        # only skews the series.  On a real accelerator, drop the join:
-        # the batcher dispatches only to already-warm widths, so the
-        # ladder may compile behind live traffic (ROADMAP).
-        pw = threading.Thread(
-            target=lambda: [solver.prewarm(g, ladder_widths)
-                            for g in rep.values()],
-            name="prewarm", daemon=True)
-        pw.start()
-        pw.join()
-    t_warm = time.perf_counter() - t0
-    cs = solver.cache_stats
-    print(f"cold pass {t_cold:.2f}s ({cold_thr:.2f} circuits/s); width "
-          f"prewarm {t_warm:.2f}s — {len(rep)} bucket(s), "
-          f"{cs.compiles} program compile(s), "
-          f"{cs.prewarms} prewarmed width(s)")
+    tuner = None
+    rep: dict = {}
+    if args.adaptive:
+        # Adaptive warm path (DESIGN.md §12): no cold sweep, no static
+        # prewarm — requests are served from the first arrival and the
+        # autotuner's compile service warms ladder widths behind live
+        # traffic, driven by the observed flush-size histograms.  Even
+        # B=1 programs compile on first flush (an unavoidable cold-start
+        # cost the static path pays in its cold sweep instead).
+        t_cold = t_warm = 0.0
+        cold_thr = 0.0
+        tuner = AutoTuner(solver, max_batch=max_batch)
+        print("adaptive: serving from first arrival; ladder widths "
+              "compile behind live traffic as flush histograms accrue")
+    else:
+        # Cold pass: one sequential sweep compiles each bucket's B=1
+        # program and measures cold (compile-inclusive) latency for the
+        # warm-vs-cold series.  The width ladder then pre-warms on a
+        # background thread — the batcher only ever dispatches to
+        # already-warm widths, so serving can start immediately and
+        # partial flushes upgrade from B=1 to laddered widths as
+        # programs come online.
+        t0 = time.perf_counter()
+        warm = solver.solve_many(pool)
+        warm[0].validate()
+        t_cold = time.perf_counter() - t0
+        cold_thr = len(pool) / max(t_cold, 1e-9)
+        for g, r in zip(pool, warm):
+            rep.setdefault(r.cache.bucket, g)
+        t0 = time.perf_counter()
+        if max_batch > 1 and not args.eager and not args.no_prewarm:
+            ladder_widths = [w for w in widths if w > 1]
+            # thread-contract: daemon (never blocks interpreter exit;
+            # prewarm holds no external resources and its work is safely
+            # abandoned mid-compile).  Joined before the measured loop
+            # only on CPU hosts (or --sync-prewarm), where GIL-bound
+            # compiles would skew the series; accelerator backends
+            # compile in XLA worker threads, so the thread detaches and
+            # the ladder warms behind live traffic — the batcher
+            # dispatches only to already-warm widths either way.
+            pw = threading.Thread(
+                target=lambda: [solver.prewarm(g, ladder_widths)
+                                for g in rep.values()],
+                name="prewarm", daemon=True)
+            pw.start()
+            if args.sync_prewarm or jax.default_backend() == "cpu":
+                pw.join()
+        t_warm = time.perf_counter() - t0
+        cs = solver.cache_stats
+        print(f"cold pass {t_cold:.2f}s ({cold_thr:.2f} circuits/s); "
+              f"width prewarm {t_warm:.2f}s — {len(rep)} bucket(s), "
+              f"{cs.compiles} program compile(s), "
+              f"{cs.prewarms} prewarmed width(s)")
 
     batcher = MicroBatcher(solver, max_batch=max_batch,
                            deadline_s=args.deadline_ms / 1e3,
-                           pipeline_depth=depth)
+                           pipeline_depth=depth, autotuner=tuner)
     served = 0
     edges = 0
     submitted = 0
@@ -322,6 +378,10 @@ def main_euler(argv=None):
             submitted += 1
             next_arrival = (next_arrival + period) if period else now
         done.extend(batcher.poll())
+        if tuner is not None:
+            # rate-limited inside step(): decays histograms, snapshots
+            # solver state, and feeds the compile service / pin set
+            tuner.step()
         if period:
             # arrival-driven idle: sleep to the next arrival or the next
             # bucket deadline, whichever fires first (no spinning)
@@ -340,9 +400,16 @@ def main_euler(argv=None):
         last = res
     elapsed = time.perf_counter() - t0
 
+    tuner_stats = {}
+    if tuner is not None:
+        tuner_stats = tuner.stats()
+        tuner.close(timeout=5.0)
+
     cs = solver.cache_stats
     thr = served / max(elapsed, 1e-9)
     fl = batcher.flushes
+    first_wide = (fl.first_wide_t - t0 if fl.first_wide_t is not None
+                  else None)
     lat = sorted(batcher.latencies)
 
     def pct(p):
@@ -351,33 +418,43 @@ def main_euler(argv=None):
     p50, p95 = pct(0.50), pct(0.95)
     print(f"served {served} circuits ({edges} edges) in {elapsed:.2f}s "
           f"→ {thr:.2f} circuits/s, {edges / max(elapsed, 1e-9):.0f} edges/s "
-          f"({len(fl)} dispatches, mean width "
-          f"{sum(fl) / max(1, len(fl)):.1f})")
+          f"({fl.total} dispatches, mean width {fl.mean_width():.1f})")
     print(f"latency p50 {p50:.1f}ms / p95 {p95:.1f}ms; cache: {cs.hits} "
           f"hits / {cs.misses} misses / {cs.compiles} compiles / "
           f"{cs.evictions} evictions; {cs.state_uploads} state uploads")
+    if tuner is not None:
+        fw = f"{first_wide:.2f}s" if first_wide is not None else "never"
+        print(f"adaptive: first wide flush at {fw} "
+              f"({fl.narrow_before_wide} narrow dispatches before it); "
+              f"{tuner_stats.get('async_prewarms', 0)} async prewarm(s), "
+              f"{tuner_stats.get('pinned', 0)} pinned program(s), "
+              f"{tuner_stats.get('tuner_steps', 0)} tuner step(s)")
     assert served > 0, "serving loop made no progress"
     last.validate()
     if args.json:
-        width_hist: dict = {}
-        for w in fl:
-            width_hist[str(w)] = width_hist.get(str(w), 0) + 1
+        width_hist = {str(w): c for w, c in sorted(fl.hist.items())}
         stats = {
             "workload": "euler-serve", "scale": args.scale,
             "parts": n_parts, "max_batch": max_batch,
             "deadline_ms": args.deadline_ms, "pipeline_depth": depth,
-            "ladder": ladder, "served": served,
+            "ladder": ladder, "adaptive": bool(args.adaptive),
+            "served": served,
             "elapsed_s": round(elapsed, 3),
             "circuits_per_s": round(thr, 3),
             "cold_circuits_per_s": round(cold_thr, 3),
             "cold_s": round(t_cold, 3), "prewarm_s": round(t_warm, 3),
             "p50_ms": round(p50, 3), "p95_ms": round(p95, 3),
-            "mean_flush": round(sum(fl) / max(1, len(fl)), 2),
-            "width_hist": width_hist, "buckets": len(rep),
+            "mean_flush": round(fl.mean_width(), 2),
+            "width_hist": width_hist,
+            "first_wide_flush_s": (round(first_wide, 3)
+                                   if first_wide is not None else None),
+            "dispatches_before_wide": fl.narrow_before_wide,
+            "buckets": len(rep) or tuner_stats.get("tuner_buckets", 0),
             "compiles": cs.compiles, "hits": cs.hits, "misses": cs.misses,
             "evictions": cs.evictions, "prewarms": cs.prewarms,
             "state_uploads": cs.state_uploads,
         }
+        stats.update(tuner_stats)
         with open(args.json, "a") as f:
             f.write(json.dumps(stats) + "\n")
     return thr

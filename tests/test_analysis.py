@@ -145,6 +145,45 @@ class S:
     assert check_source(src, "fx.py") == []
 
 
+def test_compile_thread_shaped_fixtures():
+    """R005/R006 cover the autotuner's compile-service shape: a worker
+    thread draining a queue and mutating shared dicts.  The clean variant
+    mirrors ``repro.euler.autotune.CompileService``; dropping the lock
+    around the worker-side ``pop`` or the thread contract re-fires the
+    rules."""
+    good = """
+import threading
+class Svc:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = {}
+    def submit(self, k, t):
+        with self._lock:
+            self._pending[k] = t
+    def _worker(self):
+        while True:
+            with self._lock:
+                self._pending.pop(None, None)
+    def start(self):
+        # thread-contract: daemon compile worker; stop() joins it after
+        # the sentinel drains.
+        t = threading.Thread(target=self._worker, daemon=True)
+        t.start()
+"""
+    assert check_source(good, "fx.py") == []
+    # worker mutates the guarded dict outside any lock → R005
+    racy = good.replace(
+        "            with self._lock:\n"
+        "                self._pending.pop(None, None)",
+        "            self._pending.pop(None, None)")
+    assert [f.rule for f in check_source(racy, "fx.py")] == ["R005"]
+    # thread creation without the contract comment → R006
+    bare = good.replace("        # thread-contract: daemon compile worker; "
+                        "stop() joins it after\n"
+                        "        # the sentinel drains.\n", "")
+    assert [f.rule for f in check_source(bare, "fx.py")] == ["R006"]
+
+
 def test_source_tree_is_clean():
     findings = check_paths([default_target()])
     assert findings == [], "\n".join(str(f) for f in findings)
@@ -241,6 +280,16 @@ def test_audit_golden_scale5():
     one = report["programs"][0]
     assert one["donated_marker"] is True       # one-shot path donates
     assert one["resident_marker"] is False     # cached program must not
+    # byte-budget accounting: the static cost model prices every audited
+    # program and the totals feed the solver's byte-aware LRU
+    budget = report["cache_budget"]
+    assert set(budget["per_program_bytes"]) == {"B1", "B4"}
+    assert all(v > 0 for v in budget["per_program_bytes"].values())
+    assert budget["total_bytes"] == sum(budget["per_program_bytes"].values())
+    assert budget["budget_bytes"] is None      # solver had no byte budget
+    assert budget["within_budget"] is None
+    for prog in report["programs"]:
+        assert prog["cost"]["program_bytes"] > 0
 
 
 # ----------------------------------------------------------------------

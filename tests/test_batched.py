@@ -219,7 +219,8 @@ def test_micro_batcher_quota_deadline_drain():
     done = mb.drain()
     assert [seq for seq, _ in done] == [4]
     assert mb.pending == {}
-    assert mb.flushes == [2, 1, 1]
+    assert list(mb.flushes.recent) == [2, 1, 1]
+    assert mb.flushes.hist == {2: 1, 1: 2} and mb.flushes.total == 3
 
 
 def test_micro_batcher_width_ladder_decomposes_partial_flush():
@@ -240,7 +241,7 @@ def test_micro_batcher_width_ladder_decomposes_partial_flush():
     clock.t = 0.011
     done = mb.poll()
     assert [seq for seq, _ in done] == [0, 1, 2, 3, 4]
-    assert mb.flushes == [4, 1]
+    assert list(mb.flushes.recent) == [4, 1]
     assert [(k, len(gs)) for k, gs in solver.calls] == \
         [("batch", 4), ("solve", 1)]
 
@@ -260,7 +261,7 @@ def test_micro_batcher_never_dispatches_unwarmed_width():
     mb.submit(0, graphs[0])
     done = mb.submit(1, graphs[1])  # quota hit, max_batch unwarmed
     assert [seq for seq, _ in done] == [0, 1]
-    assert mb.flushes == [1, 1]
+    assert list(mb.flushes.recent) == [1, 1]
     assert [k for k, _ in solver.calls] == ["solve", "solve"]
 
 
@@ -302,7 +303,8 @@ def test_micro_batcher_pipeline_backpressure_and_drain_order():
     assert solver.fetches == [[g] for g in graphs[:-1]]
     out.extend(mb.drain())
     assert [seq for seq, _ in out] == list(range(len(graphs)))
-    assert len(mb.inflight) == 0 and mb.latencies == [0.0] * len(graphs)
+    assert len(mb.inflight) == 0
+    assert list(mb.latencies) == [0.0] * len(graphs)
 
 
 def test_micro_batcher_sync_mode_is_depth_zero():
@@ -413,7 +415,7 @@ def test_width_ladder_flush_byte_equal_and_device_resident():
             assert mb.submit(i, g) == []      # below quota, nothing due
         done = dict(mb.drain())
         assert sorted(done) == [0, 1, 2]
-        assert mb.flushes == [2, 1], mb.flushes
+        assert list(mb.flushes.recent) == [2, 1], mb.flushes.hist
         assert done[0].cache.batch == 2 and done[2].cache.batch == 1
 
         fresh = EulerSolver(n_parts=8)
@@ -429,7 +431,7 @@ def test_width_ladder_flush_byte_equal_and_device_resident():
         assert r.cache.hit
         assert solver.cache_stats.state_uploads == up0, \\
             "warm repeat solve re-uploaded device state"
-        print("WIDTH_LADDER_OK", mb.flushes, up0)
+        print("WIDTH_LADDER_OK", mb.flushes.hist, up0)
     """, timeout=1800)
     assert "WIDTH_LADDER_OK" in out
 
