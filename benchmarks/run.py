@@ -49,7 +49,10 @@ def main():
         "phase1": lambda: bench_phase1.run(**kw),
         "memory": lambda: bench_memory.run(**kw),
     }
+    from repro import obs
+
     results = {}
+    metrics = {}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
@@ -58,6 +61,11 @@ def main():
         results[name] = fn()
         print(f"=== {name} done in {time.perf_counter() - t0:.1f}s")
         _summarize(name, results[name])
+        # per-suite cut of the process metrics registry (cumulative —
+        # solver sessions are separated by their session label)
+        metrics[name] = obs.default_registry().snapshot()
+    if metrics:
+        results["metrics"] = metrics
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1, default=float)

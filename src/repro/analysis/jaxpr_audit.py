@@ -485,6 +485,7 @@ def audit_graph(solver, graph, widths=None,
     """
     import jax
 
+    from .. import obs
     from ..core.engine import DistributedEngine
 
     pg, tree, key = solver._prepare(graph, None)
@@ -496,6 +497,7 @@ def audit_graph(solver, graph, widths=None,
         deferred_transfer=solver.deferred_transfer,
         sharded_phase3=sharded,
         gather_circuit=getattr(solver, "gather_circuit", True),
+        trace=obs.NullTraceLog(),   # audits must not perturb the session
     )
     if widths is None:
         widths = solver.width_ladder
@@ -541,4 +543,9 @@ def audit_graph(solver, graph, widths=None,
                               else total_bytes <= budget),
         },
         "ok": all(p.ok for p in programs),
+        # point-in-time cut of the solver's metrics registry (per-session
+        # labels separate this solver from others sharing the registry)
+        "metrics": (solver.registry.snapshot()
+                    if getattr(solver, "registry", None) is not None
+                    else {}),
     }

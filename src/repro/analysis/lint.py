@@ -28,6 +28,14 @@ R005  lock discipline: in a class that owns ``self._lock``, any attribute
 R006  thread contract: every ``threading.Thread(...)`` must pass an
       explicit ``daemon=`` and carry a ``thread-contract:`` comment in the
       comment block above it documenting its join/abandon rules.
+R007  orphan timing: a direct ``time.perf_counter()`` /
+      ``time.monotonic()`` read in ``repro/core``, ``repro/euler`` or
+      ``repro/launch`` whose enclosing function never feeds an
+      observability sink (``.span(``/``.observe(``/``.inc(``/…) —
+      ad-hoc wall-clock accounting belongs in ``repro.obs`` (DESIGN.md
+      §13).  Clock *references* (``clock=time.perf_counter``) are fine;
+      so is any function that routes at least one measurement through a
+      span or metric.
 
 Traced scopes are discovered, not annotated: a function is traced if its
 name is passed to a tracing entry point (``jax.jit``, ``shard_map``,
@@ -76,6 +84,16 @@ MUTATOR_METHODS = {"pop", "popitem", "setdefault", "update", "clear",
 
 # R004 applies only to these path fragments (POSIX-normalized).
 ASSERT_SCOPES = ("repro/core/", "repro/euler/")
+
+# R007 applies only to these path fragments (POSIX-normalized).
+TIMING_SCOPES = ("repro/core/", "repro/euler/", "repro/launch/")
+
+# Wall-clock reads R007 polices when *called* (references are fine).
+TIMING_CALLS = {"perf_counter", "monotonic"}
+
+# Attribute-call names that count as an observability sink: the obs
+# instrument/span surface plus the generic record/event verbs.
+OBS_SINKS = {"observe", "span", "inc", "set", "add", "record", "event"}
 
 SUPPRESS_MARK = "lint: ok"
 TRACED_MARK = "lint: traced"
@@ -551,12 +569,61 @@ class _FileLint:
                 self._emit(node, "R006",
                            "threading.Thread: " + "; ".join(problems))
 
+    # -------------------------------------------------- R007
+    def _shallow_nodes(self, fn: ast.AST) -> Iterable[ast.AST]:
+        """Every AST node lexically inside ``fn`` without descending into
+        nested def/class scopes (each def is checked on its own; lambdas
+        belong to their enclosing function)."""
+        stack: List[ast.AST] = list(fn.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    @staticmethod
+    def _is_timing_call(node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            return f.attr in TIMING_CALLS and \
+                isinstance(f.value, ast.Name) and f.value.id == "time"
+        return isinstance(f, ast.Name) and f.id in TIMING_CALLS
+
+    def _check_timing(self) -> None:
+        if not any(frag in self.posix for frag in TIMING_SCOPES):
+            return
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            reads: List[ast.AST] = []
+            has_sink = False
+            for node in self._shallow_nodes(fn):
+                if self._is_timing_call(node):
+                    reads.append(node)
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in OBS_SINKS:
+                    has_sink = True
+            if has_sink:
+                continue
+            for node in reads:
+                self._emit(
+                    node, "R007",
+                    f"wall-clock read in `{fn.name}` never reaches an "
+                    f"observability sink — route it through a repro.obs "
+                    f"span/metric (DESIGN.md §13)")
+
     # -------------------------------------------------- driver
     def run(self) -> List[Finding]:
         self._check_traced_bodies()
         self._check_asserts()
         self._check_locks()
         self._check_threads()
+        self._check_timing()
         # An assert on a tracer in core/euler would fire R003 and R004 on
         # the same line; keep the more actionable R004 only.
         r4 = {(f.path, f.line) for f in self.findings if f.rule == "R004"}

@@ -202,9 +202,11 @@ class PendingRun:
         from ..euler.result import EulerResult
 
         out = self.out
-        circuit, mate, flags, metrics, ok3 = jax.device_get(
-            (out.circuit, out.mate, out.flags, out.metrics, out.phase3_ok)
-        )
+        with self.engine.trace.span("wait", width=self.batch or 1):
+            circuit, mate, flags, metrics, ok3 = jax.device_get(
+                (out.circuit, out.mate, out.flags, out.metrics,
+                 out.phase3_ok)
+            )
         self.out = None                 # free the device buffers
         run_s = time.perf_counter() - self.t0
         if self.batch is None:          # unify to batched layouts
@@ -374,6 +376,8 @@ class DistributedEngine:
         on_upload: Optional[Callable[[], None]] = None,
         sharded_phase3: bool = False,
         gather_circuit: bool = True,
+        trace=None,
+        timed_probe: bool = False,
     ):
         self.mesh = mesh
         self.axes = axis_names
@@ -398,6 +402,17 @@ class DistributedEngine:
         # (single or stacked batch) — backs the §9 device-residency
         # acceptance ("warm repeat solves upload nothing")
         self.on_upload = on_upload
+        # span trace log (repro.obs, DESIGN.md §13); default is the
+        # process-wide log so standalone engines (the audit) trace too.
+        # timed_probe opts the eager per-level oracle into one span per
+        # level with a device sync — per-level timing the fused scan
+        # cannot expose (host callbacks are banned in its body, §10).
+        if trace is None:
+            from .. import obs
+
+            trace = obs.default_tracelog()
+        self.trace = trace
+        self.timed_probe = bool(timed_probe)
         self._step = None
         # (num_edges, batch-or-None, donated) → compiled fused program
         self._fused: Dict[Tuple[int, Optional[int], bool], object] = {}
@@ -813,6 +828,7 @@ class DistributedEngine:
         )
 
         def traced(level, anc, state):
+            self.trace.event("retrace", program="superstep")
             if self.on_trace is not None:
                 self.on_trace()
             return fn(level, anc, state)
@@ -963,6 +979,8 @@ class DistributedEngine:
         )
 
         def traced(anc, state, sv):
+            self.trace.event("retrace", program="fused",
+                             edges=num_edges, batch=batch)
             if self.on_trace is not None:
                 self.on_trace()
             return fn(anc, state, sv)
@@ -1043,27 +1061,31 @@ class DistributedEngine:
         (``donate_argnums``), so XLA may reuse the state buffers for the
         run's scratch space instead of holding two copies.
         """
-        ent = self._load_cached(pg)
-        E = pg.graph.num_edges
-        if resident:
-            if ent["dev"] is None:
-                ent["dev"] = (
-                    jax.tree.map(jnp.asarray, ent["state"]),
-                    jnp.asarray(ent["anc"]),
-                    jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32),
-                )
+        with self.trace.span("stage", resident=resident) as sp:
+            ent = self._load_cached(pg)
+            E = pg.graph.num_edges
+            sp.set(edges=E)
+            if resident:
+                if ent["dev"] is None:
+                    with self.trace.span("upload", edges=E):
+                        ent["dev"] = (
+                            jax.tree.map(jnp.asarray, ent["state"]),
+                            jnp.asarray(ent["anc"]),
+                            jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32),
+                        )
+                    if self.on_upload is not None:
+                        self.on_upload()
+                state, anc, sv_dev = ent["dev"]
+                donate = False
+            else:
+                with self.trace.span("upload", edges=E, donated=True):
+                    state = jax.tree.map(jnp.asarray, ent["state"])
+                    anc = jnp.asarray(ent["anc"])
+                    sv_dev = jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32)
                 if self.on_upload is not None:
                     self.on_upload()
-            state, anc, sv_dev = ent["dev"]
-            donate = False
-        else:
-            state = jax.tree.map(jnp.asarray, ent["state"])
-            anc = jnp.asarray(ent["anc"])
-            sv_dev = jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32)
-            if self.on_upload is not None:
-                self.on_upload()
-            donate = True
-        prog = self.fused_program(E, batch=None, donate=donate)
+                donate = True
+            prog = self.fused_program(E, batch=None, donate=donate)
         return (prog, (anc, state, sv_dev), donate, [pg], [ent["tree"]], None)
 
     def _launch(self, staged: tuple,
@@ -1073,7 +1095,8 @@ class DistributedEngine:
         outside the solver lock — jit programs are thread-safe to call."""
         prog, args, donate, pgs, trees, batch = staged
         if t0 is None:
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()   # lint: ok — dispatch epoch; the
+            #                            delta lands in wait()'s run_s
         if donate:
             with warnings.catch_warnings():
                 # CPU backends can't always honor donation; harmless
@@ -1089,7 +1112,8 @@ class DistributedEngine:
         """Dispatch ONE fused run asynchronously (stage + launch); no
         host sync happens until :meth:`PendingRun.wait`."""
         t0 = time.perf_counter()
-        return self._launch(self._stage(pg, resident=resident), t0)
+        with self.trace.span("dispatch", edges=pg.graph.num_edges):
+            return self._launch(self._stage(pg, resident=resident), t0)
 
     def evict_program(self, num_edges: int, batch: Optional[int]) -> int:
         """Drop the compiled fused program(s) for ``(num_edges, batch)``
@@ -1123,11 +1147,12 @@ class DistributedEngine:
         t0 = time.perf_counter()
         ent = self._load_cached(pg)
         if ent["dev"] is None:
-            ent["dev"] = (
-                jax.tree.map(jnp.asarray, ent["state"]),
-                jnp.asarray(ent["anc"]),
-                jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32),
-            )
+            with self.trace.span("upload", edges=pg.graph.num_edges):
+                ent["dev"] = (
+                    jax.tree.map(jnp.asarray, ent["state"]),
+                    jnp.asarray(ent["anc"]),
+                    jnp.asarray(self._pad_sv(ent["sv"]), dtype=I32),
+                )
             if self.on_upload is not None:
                 self.on_upload()
         state, anc, sv_dev = ent["dev"]
@@ -1141,7 +1166,16 @@ class DistributedEngine:
         all_flags = []
         metrics = []
         for lvl in range(self.n_levels):
-            out = step(jnp.int32(lvl), anc, state)
+            if self.timed_probe:
+                # opt-in per-level timing (DESIGN.md §13): one span per
+                # merge level with a device sync, the per-level view the
+                # fused scan cannot expose (no host callbacks in its
+                # body, §10).  Off the warm path unless requested.
+                with self.trace.span("level", level=lvl, edges=E):
+                    out = step(jnp.int32(lvl), anc, state)
+                    jax.block_until_ready(out.log_mask)
+            else:
+                out = step(jnp.int32(lvl), anc, state)
             state = out.state
             m = np.asarray(out.log_mask)
             s1 = np.asarray(out.log_s1)[m]
@@ -1214,12 +1248,13 @@ class DistributedEngine:
             # stack along a batch axis AFTER the partition axis ([n, B, ·])
             # on the host, then ship each field once — stacking device
             # arrays instead would dispatch ~#fields × B tiny device ops
-            state = jax.tree.map(
-                lambda *xs: jnp.asarray(np.stack(xs, axis=1)), *states)
-            anc = jnp.asarray(np.stack(ancs))                  # [B, H, n]
-            sv = jnp.asarray(
-                np.stack([self._pad_sv(s) for s in svs]),
-                dtype=I32)                         # [B, 2E]
+            with self.trace.span("upload", edges=E, width=B):
+                state = jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(xs, axis=1)), *states)
+                anc = jnp.asarray(np.stack(ancs))              # [B, H, n]
+                sv = jnp.asarray(
+                    np.stack([self._pad_sv(s) for s in svs]),
+                    dtype=I32)                     # [B, 2E]
             if len(self._batch_cache) >= self._batch_cache_max:
                 self._batch_cache.pop(next(iter(self._batch_cache)))
             self._batch_cache[bkey] = {
@@ -1238,7 +1273,8 @@ class DistributedEngine:
         one :class:`repro.euler.result.EulerResult` per graph,
         byte-identical to B sequential :meth:`_run` calls."""
         t0 = time.perf_counter()
-        return self._launch(self._stage_batch(pgs), t0)
+        with self.trace.span("dispatch", width=len(pgs)):
+            return self._launch(self._stage_batch(pgs), t0)
 
     def _run_batch(self, pgs: List[PartitionedGraph]):
         """Synchronous wrapper: dispatch one batched fused run, then

@@ -105,7 +105,8 @@ class HostEngine:
         through :class:`repro.euler.EulerSolver`)."""
         from ..euler.result import EulerResult
 
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()   # lint: ok — oracle path reports its
+        #                            wall time via EulerResult.timings
         states = self._init_states()
         new_local = {p.pid: p.local_eids for p in self.pg.parts}
         self._run_level(states, level=0, new_local=new_local, comm={})
@@ -129,7 +130,7 @@ class HostEngine:
             backend="host",
             fused=False,
             graph=self.pg.graph,
-            timings={"run_s": time.perf_counter() - t0},
+            timings={"run_s": time.perf_counter() - t0},  # lint: ok
         )
 
     def run(self, validate: bool = True):
@@ -224,9 +225,9 @@ class HostEngine:
             eids = new_local.get(pid, np.zeros(0, dtype=np.int64))
             nb, ni = self._boundary_internal(st, level)
             stats.phase1_cost[pid] = int(nb + ni + len(eids))
-            t0 = time.perf_counter()
-            self._phase1(st, eids, level)
-            stats.phase1_seconds[pid] = time.perf_counter() - t0
+            t0 = time.perf_counter()   # lint: ok — per-partition Phase 1
+            self._phase1(st, eids, level)  # timing lands in LevelStats
+            stats.phase1_seconds[pid] = time.perf_counter() - t0  # lint: ok
             copies, deferred = self._remote_copies(pid, level, states)
             stats.states.append(
                 PartitionState(

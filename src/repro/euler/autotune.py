@@ -51,6 +51,7 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from .. import obs
 from .bucket import TIGHT_DIVISORS, ladder_floors
 
 __all__ = [
@@ -84,7 +85,8 @@ class FlushLog:
     """
 
     def __init__(self, recent_max: int = 256,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 metric=None):
         self.hist: Dict[int, int] = {}
         self.total = 0           # dispatches observed
         self.requests = 0        # requests covered (sum of widths)
@@ -92,9 +94,15 @@ class FlushLog:
         self.first_wide_t: Optional[float] = None
         self.narrow_before_wide = 0   # dispatches before the first wide one
         self.clock = clock
+        # optional registry write-through (an obs.Histogram): the exact
+        # per-width dict above stays the source of truth for --json
+        # width_hist; the metric is what /metrics and snapshots see
+        self.metric = metric
 
     def observe(self, width: int) -> None:
         w = int(width)
+        if self.metric is not None:
+            self.metric.observe(w)
         self.hist[w] = self.hist.get(w, 0) + 1
         self.total += 1
         self.requests += w
@@ -176,6 +184,16 @@ class CompileService:
         self._thread: Optional[threading.Thread] = None
         self._stopped = False
         self.prewarms = 0               # programs actually compiled here
+        # job lifecycle observability (queued → compiling → landed /
+        # failed): spans into the solver's trace log, state-labeled
+        # counters into its registry; unit-test fake solvers fall back
+        # to the process defaults
+        self._trace = getattr(solver, "trace", None) or obs.default_tracelog()
+        reg = getattr(solver, "registry", None) or obs.default_registry()
+        self._c_jobs = reg.counter(
+            "euler_compile_jobs", "compile-service jobs by lifecycle state")
+        self._g_queue = reg.gauge(
+            "euler_compile_queue_depth", "compile-service pending jobs")
         if start:
             self.start()
 
@@ -276,6 +294,9 @@ class CompileService:
             seq = self._seq
             self._busy += 1
             self._idle.clear()
+            depth = len(self._pending)
+        self._c_jobs.labels(state="queued").inc()
+        self._g_queue.set(depth)
         self._q.put((-float(priority), seq, jkey, fn, ticket))
         return ticket
 
@@ -286,16 +307,24 @@ class CompileService:
             _, _, jkey, fn, ticket = self._q.get()
             if fn is None:          # stop sentinel (drains last)
                 break
-            try:
-                ticket.widths = list(fn() or [])
-            except BaseException as exc:  # noqa: BLE001 - isolate per job
-                ticket.error = exc
+            with self._trace.span("compile_job", label=ticket.label) as sp:
+                try:
+                    ticket.widths = list(fn() or [])
+                except BaseException as exc:  # noqa: BLE001 - per-job
+                    ticket.error = exc
+                    sp.set(error=type(exc).__name__)
+                sp.set(widths=list(ticket.widths),
+                       state="failed" if ticket.error else "landed")
+            self._c_jobs.labels(
+                state="failed" if ticket.error else "landed").inc()
             with self._lock:
                 self._pending.pop(jkey, None)
                 self.prewarms += len(ticket.widths)
                 self._busy -= 1
                 if self._busy == 0:
                     self._idle.set()
+                depth = len(self._pending)
+            self._g_queue.set(depth)
             ticket._done.set()
 
 
@@ -534,8 +563,12 @@ class AutoTuner:
             self._decay_locked(now)
             snap = self._snapshot_locked()
             reps = dict(self._rep)
-        dec = plan(snap, self.params)
-        self._apply(dec, reps)
+        trace = getattr(self.solver, "trace", None) or obs.default_tracelog()
+        with trace.span("tuner_step") as sp:
+            dec = plan(snap, self.params)
+            self._apply(dec, reps)
+            sp.set(prewarm=len(dec.prewarm), pin=len(dec.pin),
+                   evict=len(dec.evict), tighten=len(dec.tighten))
         self.steps += 1
         self.last_decision = dec
         return dec

@@ -40,6 +40,7 @@ batched execution model.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 from collections import OrderedDict
@@ -47,6 +48,7 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.engine import DistributedEngine, EngineCaps, PendingRun
 from ..core.graph import Graph, partition_graph
 from ..core.host_engine import HostEngine
@@ -58,6 +60,10 @@ from .bucket import (LADDER_FIELDS, ceil_pow2, ladder_caps, ladder_levels,
 from .result import CacheStats, EulerResult
 
 BucketKey = Tuple[int, int, int, EngineCaps]   # (e_cap, n_parts, n_levels, caps)
+
+# Sessions label their metric-family children in the (shared) registry,
+# so per-solver counters stay isolated while one scrape sees them all.
+_SESSION_SEQ = itertools.count()
 
 
 class PendingSolve:
@@ -101,7 +107,9 @@ class PendingSolve:
         """Block for the device run; one result per graph, input order."""
         if self._out is not None:
             return self._out
-        results = self._run.wait()
+        with self._solver.trace.span("fetch", bucket=self._key[0],
+                                     width=self._batch):
+            results = self._run.wait()
         total_s = time.perf_counter() - self._t0
         for g, res in zip(self._graphs, results):
             res.graph = g
@@ -199,6 +207,19 @@ class EulerSolver:
                         ``all_gather``: the post-rank shards are fetched
                         raw and the circuit is emitted host-side
                         (byte-identical; requires ``sharded_phase3``).
+    registry / trace:   the :class:`repro.obs.Registry` and
+                        :class:`repro.obs.TraceLog` this session reports
+                        into; default: the process-wide ``repro.obs``
+                        defaults.  Cache counters are registered as
+                        per-session labeled children
+                        (``{session="sN"}``), so ``cache_stats`` stays
+                        solver-scoped while one scrape sees every
+                        session (DESIGN.md §13).
+    timed_probe:        emit one ``level`` span per merge level on the
+                        eager oracle path (``fused=False``), each with a
+                        device sync — the per-level timing view the
+                        fused scan cannot expose (host callbacks are
+                        banned in its body, DESIGN.md §10/§13).
     """
 
     def __init__(
@@ -222,6 +243,9 @@ class EulerSolver:
         device_resident: bool = True,
         sharded_phase3: Optional[bool] = None,
         gather_circuit: bool = True,
+        registry: Optional[obs.Registry] = None,
+        trace: Optional[obs.TraceLog] = None,
+        timed_probe: bool = False,
     ):
         if backend not in ("device", "host"):
             raise ValueError(f"backend must be 'device' or 'host': {backend}")
@@ -301,7 +325,42 @@ class EulerSolver:
         self._field_max: dict = {}
         # lazily-created background compile service (prewarm_async)
         self._compile_service = None
-        self.cache_stats = CacheStats()
+        # observability (DESIGN.md §13): cache accounting lives in the
+        # metrics registry as per-session labeled children; cache_stats
+        # (below) is a read-through view for the existing result API.
+        # All instruments share the registry's lock, not the session's.
+        reg = registry if registry is not None else obs.default_registry()
+        self.registry = reg
+        # timed_probe forces the eager per-level oracle path to emit one
+        # "level" span per merge-tree level (engine-side; fused programs
+        # cannot host-callback, DESIGN.md §13).
+        self.timed_probe = bool(timed_probe)
+        self.trace = trace if trace is not None else obs.default_tracelog()
+        self.session = f"s{next(_SESSION_SEQ)}"
+        lab = {"session": self.session}
+        self._c_hits = reg.counter(
+            "euler_cache_hits", "program-cache hits").labels(**lab)
+        self._c_misses = reg.counter(
+            "euler_cache_misses", "program-cache misses").labels(**lab)
+        self._c_traces = reg.counter(
+            "euler_traces", "whole-run program traces (= compiles)"
+        ).labels(**lab)
+        self._c_evictions = reg.counter(
+            "euler_cache_evictions", "programs dropped by LRU/budget"
+        ).labels(**lab)
+        self._c_prewarms = reg.counter(
+            "euler_cache_prewarms", "widths compiled by prewarm"
+        ).labels(**lab)
+        self._c_uploads = reg.counter(
+            "euler_state_uploads", "host->device initial-state transfers"
+        ).labels(**lab)
+        self._g_bytes = reg.gauge(
+            "euler_cache_bytes", "modeled bytes of live cached programs"
+        ).labels(**lab)
+        self._h_compile = reg.histogram(
+            "euler_compile_seconds",
+            "cold (bucket, B) program compile+dispatch seconds",
+            lo_exp=-10, hi_exp=10).labels(**lab)
         # one solver may be driven from a serving thread and a background
         # compile thread at once: the lock serializes host-side mutation
         # (prep memo, program accounting, dispatch staging); program
@@ -311,6 +370,19 @@ class EulerSolver:
         self._lock = threading.RLock()
 
     # ------------------------------------------------------------------
+    @property
+    def cache_stats(self) -> CacheStats:
+        """Cumulative cache accounting, read through the metrics
+        registry (one consistent source for results, serve stats, the
+        audit's ``metrics`` section, and the ``--metrics-port``
+        endpoint).  Returns a fresh :class:`CacheStats` snapshot —
+        callers ``dataclasses.replace`` it per solve as before."""
+        return CacheStats(
+            hits=self._c_hits.value, misses=self._c_misses.value,
+            traces=self._c_traces.value, evictions=self._c_evictions.value,
+            prewarms=self._c_prewarms.value,
+            state_uploads=self._c_uploads.value)
+
     @property
     def mesh(self):
         if self._mesh is None:
@@ -408,16 +480,12 @@ class EulerSolver:
         return key
 
     def _on_trace(self):
-        # fires from inside jit tracing on whichever thread dispatched the
-        # program — the eager oracle path dispatches outside the session
-        # lock, so the counter bump must take it (RLock: re-entrant from
-        # the locked fused paths)
-        with self._lock:
-            self.cache_stats.traces += 1
+        # fires from inside jit tracing on whichever thread dispatched
+        # the program; the registry counter carries its own lock
+        self._c_traces.inc()
 
     def _on_upload(self):
-        with self._lock:
-            self.cache_stats.state_uploads += 1
+        self._c_uploads.inc()
 
     def _engine_for(self, key: BucketKey) -> DistributedEngine:
         """The (cached) engine owning this bucket's compiled programs."""
@@ -433,6 +501,8 @@ class EulerSolver:
                     on_upload=self._on_upload,
                     sharded_phase3=self.sharded_phase3,
                     gather_circuit=self.gather_circuit,
+                    trace=self.trace,
+                    timed_probe=self.timed_probe,
                 )
                 if len(self._engines) >= self._engines_max:
                     evicted = next(iter(self._engines))
@@ -465,7 +535,8 @@ class EulerSolver:
             old_eng = self._engines.get(k_old)
             if old_eng is not None:
                 old_eng.evict_program(k_old[0], b_old)
-            self.cache_stats.evictions += 1
+            self._c_evictions.inc()
+            self._g_bytes.set(self._bytes_total)
 
     def _evict_to_budget(self, keep=None) -> None:
         """Evict LRU-first until both the count cap and (when set) the
@@ -498,14 +569,15 @@ class EulerSolver:
             pkey = (key, batch)
             hit = pkey in self._programs
             if hit:
-                self.cache_stats.hits += 1
+                self._c_hits.inc()
                 self._programs.move_to_end(pkey)
             else:
-                self.cache_stats.misses += 1
+                self._c_misses.inc()
                 self._programs[pkey] = True
                 cost = self._program_cost(key, batch)
                 self._program_bytes[pkey] = cost
                 self._bytes_total += cost
+                self._g_bytes.set(self._bytes_total)
                 self._evict_to_budget(keep=pkey)
             return hit
 
@@ -540,12 +612,12 @@ class EulerSolver:
             with self._lock:
                 if (key, None if w == 1 else w) in self._programs:
                     continue
-            if w == 1:
-                self.solve(graph)
-            else:
-                self.solve_batch([graph] * w)
-            with self._lock:
-                self.cache_stats.prewarms += 1
+            with self.trace.span("prewarm", bucket=key[0], width=w):
+                if w == 1:
+                    self.solve(graph)
+                else:
+                    self.solve_batch([graph] * w)
+            self._c_prewarms.inc()
             compiled.append(w)
         return compiled
 
@@ -707,7 +779,8 @@ class EulerSolver:
         t_prep = time.perf_counter() - t0
         eng = self._engine_for(key)
         hit = self._account(key, None)
-        res = eng._run(pg, fused=False)
+        with self.trace.span("solve_eager", bucket=key[0], hit=hit):
+            res = eng._run(pg, fused=False)
         res.graph = graph
         res.padded_edges = key[0] - graph.num_edges
         res.circuit = strip_circuit(res.circuit, graph.num_edges)
@@ -737,8 +810,12 @@ class EulerSolver:
             staged = eng._stage(pg, resident=self.device_resident)
         # program call OUTSIDE the session lock: a cold program compiles
         # here, so background prewarm compiles (the compile service) never
-        # block a concurrent serving dispatch (DESIGN.md §12)
-        run = eng._launch(staged, t0)
+        # block a concurrent serving dispatch (DESIGN.md §12).  A miss's
+        # launch time ≈ compile time (the span feeds euler_compile_seconds).
+        with self.trace.span("launch",
+                             metric=None if hit else self._h_compile,
+                             bucket=key[0], width=1, hit=hit):
+            run = eng._launch(staged, t0)
         return PendingSolve(self, run, [graph], key, hit, t0, t_prep, 1)
 
     def solve_batch(self, graphs: Iterable[Graph],
@@ -804,7 +881,10 @@ class EulerSolver:
             hit = self._account(key, B)
             staged = eng._stage_batch([p[0] for p in preps])
         # see solve_async: compile/dispatch happens outside the lock
-        run = eng._launch(staged, t0)
+        with self.trace.span("launch",
+                             metric=None if hit else self._h_compile,
+                             bucket=key[0], width=B, hit=hit):
+            run = eng._launch(staged, t0)
         return PendingSolve(self, run, graphs, key, hit, t0, t_prep, B)
 
     def solve_many(self, graphs: Iterable[Graph],
@@ -852,7 +932,8 @@ class EulerSolver:
         pg = partition_graph(graph, part)
         eng = HostEngine(pg, remote_dedup=self.remote_dedup,
                          deferred_transfer=self.deferred_transfer)
-        res = eng._run()
+        with self.trace.span("solve_host", edges=graph.num_edges):
+            res = eng._run()
         res.timings["total_s"] = time.perf_counter() - t0
         return res
 

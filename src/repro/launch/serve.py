@@ -74,8 +74,8 @@ class MicroBatcher:
 
     def __init__(self, solver, max_batch: int = 8,
                  deadline_s: float = 0.010, clock=time.perf_counter,
-                 pipeline_depth: int = 2, autotuner=None,
-                 latency_window: int = 4096):
+                 pipeline_depth: int = 2, autotuner=None):
+        from .. import obs
         from ..euler.autotune import FlushLog
 
         if max_batch < 1 or pipeline_depth < 0:
@@ -90,12 +90,28 @@ class MicroBatcher:
         self.autotuner = autotuner
         self.pending: dict = {}     # bucket key → [(seq, graph, t_arrival)]
         self.inflight: deque = deque()   # (PendingSolve, [seq], [t_arrival])
+        # observability (DESIGN.md §13): flush widths, request latencies
+        # and queue depth live in the metrics registry as per-session
+        # labeled children (same session label as the solver's cache
+        # counters), so one scrape separates concurrent batchers; flush
+        # decomposition is additionally traced as "flush" spans.
+        reg = getattr(solver, "registry", None) or obs.default_registry()
+        self.trace = getattr(solver, "trace", None) or obs.default_tracelog()
+        lab = {"session": getattr(solver, "session", "s?")}
         # bounded per-dispatch width accounting (histogram + rolling
         # window) — a long-lived server no longer grows a per-dispatch
-        # list without bound
-        self.flushes = FlushLog(clock=clock)
-        # per-request arrival→delivery seconds, bounded rolling window
-        self.latencies: deque = deque(maxlen=int(latency_window))
+        # list without bound; widths also land in euler_flush_width
+        self.flushes = FlushLog(clock=clock, metric=reg.histogram(
+            "euler_flush_width", "requests per dispatched program",
+            lo_exp=0, hi_exp=8).labels(**lab))
+        # per-request arrival→delivery seconds (bounded log2 histogram —
+        # replaces the PR 6 rolling deque + sort-based percentiles)
+        self.latencies = reg.histogram(
+            "euler_latency_seconds", "request arrival→delivery seconds",
+            lo_exp=-14, hi_exp=8).labels(**lab)
+        self._g_depth = reg.gauge(
+            "euler_queue_depth", "requests queued awaiting a flush"
+        ).labels(**lab)
 
     # -- pipeline ------------------------------------------------------
     def _harvest_one(self):
@@ -103,7 +119,8 @@ class MicroBatcher:
         pend, seqs, ts = self.inflight.popleft()
         results = pend.results()
         now = self.clock()
-        self.latencies.extend(now - t for t in ts)
+        for t in ts:
+            self.latencies.observe(now - t)
         return list(zip(seqs, results))
 
     def _harvest(self, block: bool = False):
@@ -129,23 +146,31 @@ class MicroBatcher:
 
     def _flush(self, key):
         reqs = self.pending.pop(key, [])
-        if reqs and self.autotuner is not None:
+        if not reqs:
+            return []
+        if self.autotuner is not None:
             self.autotuner.observe_flush(key, len(reqs))
         out = []
-        i = 0
-        while i < len(reqs):
-            n = len(reqs) - i
-            w = next(x for x in self._widths_for(key, n) if x <= n)
-            chunk = reqs[i:i + w]
-            i += w
-            graphs = [g for _, g, _ in chunk]
-            pend = (self.solver.solve_batch_async(graphs) if w > 1
-                    else self.solver.solve_async(graphs[0]))
-            self.inflight.append((pend, [s for s, _, _ in chunk],
-                                  [t for _, _, t in chunk]))
-            self.flushes.observe(w)
-            while len(self.inflight) > self.pipeline_depth:
-                out.extend(self._harvest_one())
+        bucket = key[0] if isinstance(key, tuple) else key
+        widths = []
+        with self.trace.span("flush", bucket=bucket, n=len(reqs)) as sp:
+            i = 0
+            while i < len(reqs):
+                n = len(reqs) - i
+                w = next(x for x in self._widths_for(key, n) if x <= n)
+                chunk = reqs[i:i + w]
+                i += w
+                graphs = [g for _, g, _ in chunk]
+                pend = (self.solver.solve_batch_async(graphs) if w > 1
+                        else self.solver.solve_async(graphs[0]))
+                self.inflight.append((pend, [s for s, _, _ in chunk],
+                                      [t for _, _, t in chunk]))
+                self.flushes.observe(w)
+                widths.append(w)
+                while len(self.inflight) > self.pipeline_depth:
+                    out.extend(self._harvest_one())
+            sp.set(widths=widths)
+        self._g_depth.set(sum(len(q) for q in self.pending.values()))
         return out
 
     # -- public interface ----------------------------------------------
@@ -157,6 +182,7 @@ class MicroBatcher:
             self.autotuner.observe_arrival(key, graph)
         q = self.pending.setdefault(key, [])
         q.append((seq, graph, self.clock()))
+        self._g_depth.set(sum(len(x) for x in self.pending.values()))
         out = self._flush(key) if len(q) >= self.max_batch else []
         out.extend(self._harvest())
         return sorted(out)
@@ -247,6 +273,11 @@ def main_euler(argv=None):
     ap.add_argument("--arrival-hz", type=float, default=0.0,
                     help="paced request arrivals per second "
                          "(0 → closed loop: submit as fast as served)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose the session's metrics registry over HTTP "
+                         "on this port for the run: GET /metrics "
+                         "(Prometheus text) and /metrics.json (snapshot); "
+                         "0 picks an ephemeral port")
     ap.add_argument("--json", default=None,
                     help="append a JSON line of serving stats to this file")
     ap.add_argument("--seed", type=int, default=0)
@@ -274,6 +305,15 @@ def main_euler(argv=None):
                          straggler_cap=ladder,
                          width_ladder=tuple(widths),
                          program_cache_bytes=args.cache_bytes or None)
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from .. import obs
+
+        metrics_srv = obs.MetricsServer(solver.registry,
+                                        port=args.metrics_port,
+                                        trace=solver.trace)
+        print(f"metrics: {metrics_srv.url}/metrics (Prometheus) and "
+              f"{metrics_srv.url}/metrics.json")
     if args.same_bucket:
         from ..euler import modal_bucket_pool
 
@@ -322,7 +362,8 @@ def main_euler(argv=None):
         # partial flushes upgrade from B=1 to laddered widths as
         # programs come online.
         t0 = time.perf_counter()
-        warm = solver.solve_many(pool)
+        with solver.trace.span("cold_sweep", pool=len(pool)):
+            warm = solver.solve_many(pool)
         warm[0].validate()
         t_cold = time.perf_counter() - t0
         cold_thr = len(pool) / max(t_cold, 1e-9)
@@ -410,12 +451,11 @@ def main_euler(argv=None):
     fl = batcher.flushes
     first_wide = (fl.first_wide_t - t0 if fl.first_wide_t is not None
                   else None)
-    lat = sorted(batcher.latencies)
-
-    def pct(p):
-        return lat[min(len(lat) - 1, int(p * len(lat)))] * 1e3 if lat else 0.0
-
-    p50, p95 = pct(0.50), pct(0.95)
+    # percentiles come from the registry histogram (log2 buckets with
+    # linear interpolation, DESIGN.md §13) — same --json keys as the
+    # PR 6 sorted-deque math they replace
+    p50 = batcher.latencies.percentile(0.50) * 1e3
+    p95 = batcher.latencies.percentile(0.95) * 1e3
     print(f"served {served} circuits ({edges} edges) in {elapsed:.2f}s "
           f"→ {thr:.2f} circuits/s, {edges / max(elapsed, 1e-9):.0f} edges/s "
           f"({fl.total} dispatches, mean width {fl.mean_width():.1f})")
@@ -457,6 +497,8 @@ def main_euler(argv=None):
         stats.update(tuner_stats)
         with open(args.json, "a") as f:
             f.write(json.dumps(stats) + "\n")
+    if metrics_srv is not None:
+        metrics_srv.close()
     return thr
 
 

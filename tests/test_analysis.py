@@ -60,12 +60,20 @@ def go():
     t = threading.Thread(target=print)
     t.start()
 """,
+    "R007": """
+import time
+def dispatch(prog, args):
+    t0 = time.perf_counter()
+    out = prog(*args)
+    return out, time.perf_counter() - t0  # lint: ok
+""",
 }
 
 
 @pytest.mark.parametrize("rule", sorted(BAD))
 def test_each_rule_fires_exactly_once(rule):
-    path = "src/repro/core/fx.py" if rule == "R004" else "fx.py"
+    path = ("src/repro/core/fx.py" if rule in ("R004", "R007")
+            else "fx.py")
     findings = check_source(BAD[rule], path)
     assert [f.rule for f in findings] == [rule], findings
 
@@ -182,6 +190,30 @@ class Svc:
                         "stop() joins it after\n"
                         "        # the sentinel drains.\n", "")
     assert [f.rule for f in check_source(bare, "fx.py")] == ["R006"]
+
+
+def test_timing_rule_scope_and_sinks():
+    """R007 is satisfied by routing the measurement through an obs sink,
+    by clock *references*, and by being outside the policed trees."""
+    sinked = """
+import time
+def dispatch(trace, prog, args):
+    t0 = time.perf_counter()
+    with trace.span("dispatch"):
+        out = prog(*args)
+    return out, time.perf_counter() - t0
+"""
+    assert check_source(sinked, "src/repro/core/fx.py") == []
+    # a clock reference (no call) is how instruments take injectable
+    # clocks — never a finding
+    ref = """
+import time
+def make(clock=time.perf_counter):
+    return clock
+"""
+    assert check_source(ref, "src/repro/euler/fx.py") == []
+    # identical orphan timing outside repro/{core,euler,launch} is fine
+    assert check_source(BAD["R007"], "src/repro/analysis/fx.py") == []
 
 
 def test_source_tree_is_clean():

@@ -33,21 +33,25 @@ def test_solve_batch_byte_identical_one_compile_per_width():
         group = group[:8]
 
         seq = [solver.solve(g) for g in group]
+        # cache_stats is a point-in-time snapshot (registry-backed
+        # property): re-read it after each phase
         cs = solver.cache_stats
         assert cs.traces == 1, f"single-graph program traced {cs.traces}x"
 
         # B = 1 delegates to the single-graph program: no new trace
         one = solver.solve_batch(group[:1])
-        assert len(one) == 1 and cs.traces == 1
+        assert len(one) == 1 and solver.cache_stats.traces == 1
         assert (one[0].circuit == seq[0].circuit).all()
 
         # B = 3 and B = 8 each compile exactly once, then hit
         for B, expect_traces in ((3, 2), (8, 3)):
             first = solver.solve_batch(group[:B])
+            cs = solver.cache_stats
             assert cs.traces == expect_traces, (B, cs.traces)
             assert not first[0].cache.hit and first[0].cache.batch == B
             again = solver.solve_batch(group[:B])
-            assert cs.traces == expect_traces, f"(bucket, {B}) retraced"
+            assert solver.cache_stats.traces == expect_traces, \\
+                f"(bucket, {B}) retraced"
             assert again[0].cache.hit
             for s, a, b in zip(seq, first, again):
                 assert (s.circuit == a.circuit).all()
@@ -304,7 +308,10 @@ def test_micro_batcher_pipeline_backpressure_and_drain_order():
     out.extend(mb.drain())
     assert [seq for seq, _ in out] == list(range(len(graphs)))
     assert len(mb.inflight) == 0
-    assert list(mb.latencies) == [0.0] * len(graphs)
+    # latencies now land in a registry histogram: one observation per
+    # delivered request, all zero under the fake clock
+    assert mb.latencies.count == len(graphs)
+    assert mb.latencies.sum == 0.0
 
 
 def test_micro_batcher_sync_mode_is_depth_zero():
